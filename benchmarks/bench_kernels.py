@@ -1,0 +1,54 @@
+"""Kernel microbench (interpret mode on CPU — timings are indicative only;
+the derived column carries the correctness check vs the oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.ciao_gather.ops import ciao_gather
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    b, s, h, d = 1, 256, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    us = time_call(flash_attention, q, k, v, causal=True, interpret=True)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref = attention_ref(qb, kb, vb).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    flops = 4 * b * h * s * s * d
+    emit("kernel/flash_attn_256", us, f"err={err:.1e};flops={flops:.2e}")
+
+    qd = jax.random.normal(ks[0], (2, 1, h, d), jnp.float32)
+    ck = jax.random.normal(ks[1], (2, 1024, h, d), jnp.float32)
+    cv = jax.random.normal(ks[2], (2, 1024, h, d), jnp.float32)
+    lens = jnp.array([900, 1024], jnp.int32)
+    us = time_call(decode_attention, qd, ck, cv, lens, interpret=True)
+    emit("kernel/decode_attn_1k", us, "ok")
+
+    rng = np.random.default_rng(0)
+    table = jax.random.normal(key, (512, 128), jnp.float32)
+    streams = rng.integers(0, 4, 1024).astype(np.int32)
+    idx = rng.integers(0, 512, 1024).astype(np.int32)
+    iso = jnp.array([0, 0, 0, 1], jnp.int32)
+    us = time_call(ciao_gather, table, jnp.array(idx), jnp.array(streams),
+                   iso, interpret=True)
+    _, stats = ciao_gather(table, jnp.array(idx), jnp.array(streams), iso,
+                           interpret=True)
+    hits = int(np.asarray(stats)[:, 0].sum())
+    emit("kernel/ciao_gather_1k", us, f"hits={hits}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 12 reproduction: L1D/DRAM configuration sweep — bigger/wider L1D
+vs CIAO, and 2x DRAM bandwidth variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import make_workload
+from repro.core.onchip import OnChipConfig
+from repro.core.simulator import SMSimulator, SimConfig
+
+
+def main():
+    for name in ("syrk", "kmn"):
+        wl = make_workload(name, scale=0.5)
+        base = SMSimulator(wl, "gto").run().ipc
+
+        variants = {
+            # GTO-cap: L1D 48KB / smem 16KB (Fig. 12 "GTO-cap")
+            "gto-cap": ("gto", SimConfig(onchip=OnChipConfig(
+                l1_bytes=48 * 1024, smem_bytes=16 * 1024))),
+            # GTO-8way
+            "gto-8way": ("gto", SimConfig(onchip=OnChipConfig(ways=8))),
+            "ciao-c": ("ciao-c", SimConfig()),
+            # 2x DRAM bandwidth
+            "statpcal-2x": ("statpcal", SimConfig(dram_gap=4)),
+            "ciao-c-2x": ("ciao-c", SimConfig(dram_gap=4)),
+        }
+        for label, (pol, cfg) in variants.items():
+            r = SMSimulator(wl, pol, cfg).run()
+            emit(f"fig12/{name}/{label}", 0.0,
+                 f"ipc={r.ipc / base:.3f};hit={r.l1_hit_rate:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig. 9 reproduction: time-phase behaviour on the two-phase ATAX-like
+workload and the compute-intensive Backprop-like one (IPC + active warps
+over time per scheduler)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import make_workload
+from repro.core.simulator import SMSimulator
+
+
+def main():
+    for wl_name in ("atax", "backprop"):
+        wl = make_workload(wl_name, scale=0.5)
+        for pol in ("best-swl", "ccws", "ciao-t", "ciao-c"):
+            kw = {"limit": wl.n_wrp} if pol == "best-swl" and wl.n_wrp else {}
+            sim = SMSimulator(wl, pol, policy_kwargs=kw or None)
+            r = sim.run(timeline_every=10_000)
+            # phase split: first half vs second half of the timeline
+            half = max(len(r.timeline) // 2, 1)
+            ipc1 = sum(t[1] for t in r.timeline[:half]) / max(half, 1)
+            ipc2 = sum(t[1] for t in r.timeline[half:]) / max(
+                len(r.timeline) - half, 1)
+            act = sum(t[2] for t in r.timeline) / max(len(r.timeline), 1)
+            emit(f"fig9/{wl_name}/{pol}",
+                 0.0, f"ipc_p1={ipc1:.3f};ipc_p2={ipc2:.3f};"
+                      f"act={act:.1f};total_ipc={r.ipc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

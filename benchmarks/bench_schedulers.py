@@ -1,0 +1,50 @@
+"""Fig. 8 reproduction: normalized IPC of 7 schedulers across the LWS /
+SWS / CI benchmark classes + geometric means."""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import WORKLOADS, make_workload
+from repro.core.simulator import run_policy_sweep
+
+POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
+            "ciao-c")
+BENCH_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
+             "syrk", "gesummv", "syr2k", "ii",          # SWS
+             "backprop", "conv2d", "gaussian", "nw")    # CI
+
+
+def main(scale: float = 0.5):
+    per_class = {"LWS": {p: [] for p in POLICIES},
+                 "SWS": {p: [] for p in POLICIES},
+                 "CI": {p: [] for p in POLICIES}}
+    allw = {p: [] for p in POLICIES}
+    for name in BENCH_SET:
+        wl = make_workload(name, scale=scale)
+        t0 = time.perf_counter()
+        res = run_policy_sweep(wl, POLICIES)
+        dt = (time.perf_counter() - t0) * 1e6
+        gto = res["gto"].ipc
+        for p in POLICIES:
+            rel = res[p].ipc / max(gto, 1e-12)
+            per_class[wl.klass][p].append(rel)
+            allw[p].append(rel)
+            emit(f"fig8/{name}/{p}", dt / len(POLICIES), f"{rel:.3f}")
+    for klass, data in per_class.items():
+        for p in POLICIES:
+            gm = math.exp(np.mean([math.log(max(x, 1e-9))
+                                   for x in data[p]]))
+            emit(f"fig8/geomean_{klass}/{p}", 0.0, f"{gm:.3f}")
+    for p in POLICIES:
+        gm = math.exp(np.mean([math.log(max(x, 1e-9)) for x in allw[p]]))
+        emit(f"fig8/geomean_all/{p}", 0.0, f"{gm:.3f}")
+    return {p: math.exp(np.mean([math.log(max(x, 1e-9)) for x in allw[p]]))
+            for p in POLICIES}
+
+
+if __name__ == "__main__":
+    main()

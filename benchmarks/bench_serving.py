@@ -1,0 +1,33 @@
+"""Beyond-paper: CIAO at the serving layer — tokens/work-unit and
+preemptions under two pool-pressure levels."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.serving import PoolConfig, ServeConfig, ServeEngine, synth_requests
+
+POLICIES = ("gto", "ccws", "statpcal", "ciao-p", "ciao-t", "ciao-c")
+
+
+def main():
+    for label, pool, heavy in (
+        ("moderate", PoolConfig(main_pages=768, reserve_pages=224), 0.2),
+        ("high", PoolConfig(main_pages=640, reserve_pages=192), 0.3),
+    ):
+        reqs = synth_requests(256, groups=10, prefix_pages=24,
+                              decode_tokens=128, heavy_frac=heavy,
+                              heavy_decode=1000)
+        base = None
+        for pol in POLICIES:
+            cfg = ServeConfig(policy=pol, groups=10, pool=pool)
+            st = ServeEngine(cfg).run(list(reqs))
+            if pol == "gto":
+                base = st.tokens_per_unit
+            emit(f"serving/{label}/{pol}", 0.0,
+                 f"tok_per_unit={st.tokens_per_unit:.3f}"
+                 f";rel={st.tokens_per_unit / base:.3f}"
+                 f";preempt={st.preemptions};refetch={st.refetched_pages}"
+                 f";goodput={st.goodput:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig. 10 reproduction: CIAO-P vs CIAO-T vs CIAO-C on a small-working-set
+(SYRK-like) and a large-working-set (KMN-like) benchmark."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import make_workload
+from repro.core.simulator import run_policy_sweep
+
+
+def main():
+    for name in ("syrk", "kmn"):
+        wl = make_workload(name, scale=0.5)
+        res = run_policy_sweep(wl, ("gto", "ciao-p", "ciao-t", "ciao-c"))
+        gto = res["gto"].ipc
+        for p, r in res.items():
+            emit(f"fig10/{name}/{p}", 0.0,
+                 f"ipc={r.ipc / gto:.3f};hit={r.l1_hit_rate:.3f};"
+                 f"act={r.mean_active_warps:.1f};"
+                 f"smem_evics={r.stats.get('smem_evictions', 0)}")
+
+
+if __name__ == "__main__":
+    main()

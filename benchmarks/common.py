@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: Any) -> None:
+    ROWS.append((name, us_per_call, str(derived)))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        # block on jax outputs if any
+        try:
+            import jax
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (stdout) per the harness contract.
+
+  python -m benchmarks.run [--only fig8,serving,...] [--scale 0.5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig4,fig8,fig9,fig10,fig11,fig12,"
+                         "serving,kernels,roofline")
+    ap.add_argument("--scale", type=float, default=0.5,
+                    help="trace-length scale for simulator benches")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    header()
+    t0 = time.time()
+    if want("fig4"):
+        from benchmarks import bench_interference
+        bench_interference.main()
+    if want("fig8"):
+        from benchmarks import bench_schedulers
+        bench_schedulers.main(scale=args.scale)
+    if want("fig9"):
+        from benchmarks import bench_phases
+        bench_phases.main()
+    if want("fig10"):
+        from benchmarks import bench_workingset
+        bench_workingset.main()
+    if want("fig11"):
+        from benchmarks import bench_sensitivity
+        bench_sensitivity.main()
+    if want("fig12"):
+        from benchmarks import bench_onchip
+        bench_onchip.main()
+    if want("serving"):
+        from benchmarks import bench_serving
+        bench_serving.main()
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.main()
+    print(f"# total_bench_seconds,{time.time() - t0:.1f},-")
+
+
+if __name__ == "__main__":
+    main()

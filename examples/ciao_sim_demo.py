@@ -1,0 +1,30 @@
+"""Paper-faithful demo: the SM simulator running all seven schedulers on
+one benchmark per class (LWS / SWS / CI) — the Fig. 8 experiment in
+miniature.
+
+    PYTHONPATH=src python examples/ciao_sim_demo.py
+"""
+from repro.core import make_workload
+from repro.core.simulator import run_policy_sweep
+
+POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
+            "ciao-c")
+
+
+def main():
+    for name in ("kmn", "syrk", "backprop"):
+        wl = make_workload(name, scale=0.5)
+        res = run_policy_sweep(wl, POLICIES)
+        gto = res["gto"].ipc
+        print(f"\n{name} [{wl.klass}]  (IPC normalized to GTO)")
+        print(f"{'policy':10s} {'ipc':>6s} {'hit%':>6s} {'active':>7s} "
+              f"{'vta_hits':>9s}")
+        for p in POLICIES:
+            r = res[p]
+            print(f"{p:10s} {r.ipc / gto:6.2f} "
+                  f"{100 * r.l1_hit_rate:6.1f} "
+                  f"{r.mean_active_warps:7.1f} {r.vta_hits:9d}")
+
+
+if __name__ == "__main__":
+    main()

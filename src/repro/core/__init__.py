@@ -1,0 +1,8 @@
+from repro.core.vta import VictimTagArray  # noqa: F401
+from repro.core.interference import InterferenceDetector, DetectorConfig  # noqa: F401
+from repro.core.onchip import OnChipMemory, OnChipConfig  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    GTOPolicy, CCWSPolicy, BestSWLPolicy, StatPCALPolicy,
+    CIAOPolicy, make_policy, POLICY_NAMES)
+from repro.core.simulator import SMSimulator, SimConfig, SimResult  # noqa: F401
+from repro.core.traces import make_workload, WORKLOADS  # noqa: F401

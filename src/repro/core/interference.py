@@ -1,0 +1,188 @@
+"""Cache-interference detection (paper §III-A, §IV-A, Fig. 6).
+
+Faithful implementation of:
+
+* **Interference list** — 64 entries indexed by interfered WID, each holding
+  a 6-bit interfering WID + 2-bit saturating counter. The counter tracks the
+  *most recently and frequently* interfering warp: same-warp events increment
+  (saturating at 3), different-warp events decrement; the stored WID is
+  replaced only when the counter underflows at 0 (Fig. 4c).
+
+* **Pair list** — 64 entries x two 6-bit fields: field 0 records which
+  interfered warp triggered the *redirection* (isolation) of this warp,
+  field 1 which triggered its *stall*. -1 = empty. Used by Algorithm 1 to
+  undo actions in reverse order.
+
+* **IRS** (Eq. 1): ``IRS_i = F_vta_hits(i) / (N_exec_inst / N_active_warps)``
+  evaluated on two epochs — the high-cutoff epoch (5000 instructions, decide
+  isolate/stall) and the low-cutoff epoch (100 instructions, decide
+  reactivate/un-redirect). Cutoffs 0.01 / 0.005 (§IV-A; sensitivity §V-E).
+
+The same detector instance is shared by the on-chip memory model (CIAO-P)
+and the warp scheduler (CIAO-T) — paper §III-C notes L1D and shared-memory
+interference do not mix, so one VTA suffices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.vta import VictimTagArray
+
+NO_WARP = -1
+
+
+@dataclasses.dataclass
+class DetectorConfig:
+    num_warps: int = 48
+    list_entries: int = 64           # §V-F: 64-entry interference/pair lists
+    vta_sets: int = 48
+    vta_tags_per_set: int = 8
+    high_cutoff: float = 0.01
+    low_cutoff: float = 0.005
+    high_epoch: int = 5000           # instructions
+    low_epoch: int = 100
+    sat_max: int = 3                 # 2-bit saturating counter
+    # Counter aging (refinement, ablatable): every N high epochs the
+    # cumulative VTA-hit counters and the IRS instruction counter are
+    # halved (hardware: shift right). Preserves Eq. 1 ratios but bounds the
+    # history horizon so reactivation (low-cutoff test) tracks phase
+    # changes instead of the whole-kernel average. 0 disables.
+    aging_high_epochs: int = 10
+
+
+class InterferenceDetector:
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+        self.vta = VictimTagArray(cfg.vta_sets, cfg.vta_tags_per_set)
+        n = cfg.list_entries
+        self.interfering_wid: List[int] = [NO_WARP] * n
+        self.sat_counter: List[int] = [0] * n
+        self.pair_list: List[List[int]] = [[NO_WARP, NO_WARP] for _ in range(n)]
+        self.inst_total = 0          # Inst-total counter (per SM)
+        self.irs_inst = 0            # aged copy used as Eq. 1 denominator
+        self.irs_hits = [0] * cfg.num_warps   # aged per-warp VTA-hit counters
+        self.vta_hit_events = 0
+        self._high_crossings = 0
+        # windowed IRS state: snapshots taken at epoch crossings
+        nw = cfg.num_warps
+        self._low_idx = 0
+        self._high_idx = 0
+        self._low_base_hits = [0] * nw
+        self._high_base_hits = [0] * nw
+        self._low_base_inst = 0
+        self._high_base_inst = 0
+        self.irs_low_snap = [0.0] * nw
+        self.irs_high_snap = [0.0] * nw
+
+    # ------------------------------------------------------------- events
+    def on_instruction(self, n: int = 1) -> None:
+        self.inst_total += n
+        self.irs_inst += n
+
+    def on_eviction(self, owner_wid: int, line_addr: int,
+                    evictor_wid: int) -> None:
+        self.vta.insert(owner_wid, line_addr, evictor_wid)
+
+    def on_miss(self, wid: int, line_addr: int) -> Optional[int]:
+        """Probe VTA; on a VTA hit update the interference list (Fig. 4c)
+        and return the interfering WID."""
+        evictor = self.vta.probe(wid, line_addr)
+        if evictor is None:
+            return None
+        self.vta_hit_events += 1
+        self.irs_hits[wid % self.cfg.num_warps] += 1
+        i = wid % self.cfg.list_entries
+        if self.interfering_wid[i] == evictor:
+            self.sat_counter[i] = min(self.sat_counter[i] + 1, self.cfg.sat_max)
+        elif self.interfering_wid[i] == NO_WARP:
+            self.interfering_wid[i] = evictor
+            self.sat_counter[i] = 0
+        else:
+            if self.sat_counter[i] == 0:
+                self.interfering_wid[i] = evictor   # replace on underflow
+            else:
+                self.sat_counter[i] -= 1
+        return evictor
+
+    # ---------------------------------------------------------------- IRS
+    def irs(self, wid: int, active_warps: int) -> float:
+        """Eq. 1 over the aged cumulative counters."""
+        if self.irs_inst == 0 or active_warps <= 0:
+            return 0.0
+        per_warp_inst = self.irs_inst / active_warps
+        if per_warp_inst <= 0:
+            return 0.0
+        return self.irs_hits[wid % self.cfg.num_warps] / per_warp_inst
+
+    def poll_epochs(self, active_warps: int) -> Tuple[bool, bool]:
+        """Check for low/high epoch crossings (robust to batched instruction
+        counting). At each crossing, snapshot the *windowed* IRS — Eq. 1
+        evaluated over the epoch that just ended, so IRS tracks "the latest
+        IRS_i" (§IV-A) and falls once an interferer is isolated/stalled."""
+        cfg = self.cfg
+        active_warps = max(active_warps, 1)
+        crossed_low = crossed_high = False
+        low_idx = self.inst_total // cfg.low_epoch
+        if low_idx != self._low_idx:
+            self._low_idx = low_idx
+            window = max(self.inst_total - self._low_base_inst, 1)
+            per_warp = window / active_warps
+            for w in range(cfg.num_warps):
+                h = self.vta.hit_count(w) - self._low_base_hits[w]
+                self.irs_low_snap[w] = h / per_warp
+                self._low_base_hits[w] = self.vta.hit_count(w)
+            self._low_base_inst = self.inst_total
+            crossed_low = True
+        high_idx = self.inst_total // cfg.high_epoch
+        if high_idx != self._high_idx:
+            self._high_idx = high_idx
+            window = max(self.inst_total - self._high_base_inst, 1)
+            per_warp = window / active_warps
+            for w in range(cfg.num_warps):
+                h = self.vta.hit_count(w) - self._high_base_hits[w]
+                self.irs_high_snap[w] = h / per_warp
+                self._high_base_hits[w] = self.vta.hit_count(w)
+            self._high_base_inst = self.inst_total
+            crossed_high = True
+            self._high_crossings += 1
+            if cfg.aging_high_epochs and \
+                    self._high_crossings % cfg.aging_high_epochs == 0:
+                self.irs_inst //= 2
+                self.irs_hits = [h // 2 for h in self.irs_hits]
+        return crossed_low, crossed_high
+
+    def irs_low(self, wid: int) -> float:
+        return self.irs_low_snap[wid % self.cfg.num_warps]
+
+    def irs_high(self, wid: int) -> float:
+        return self.irs_high_snap[wid % self.cfg.num_warps]
+
+    def most_interfering(self, wid: int) -> int:
+        return self.interfering_wid[wid % self.cfg.list_entries]
+
+    # ------------------------------------------------------------ pair list
+    def record_isolation(self, interfering: int, interfered: int) -> None:
+        self.pair_list[interfering % self.cfg.list_entries][0] = interfered
+
+    def record_stall(self, interfering: int, interfered: int) -> None:
+        self.pair_list[interfering % self.cfg.list_entries][1] = interfered
+
+    def isolation_trigger(self, wid: int) -> int:
+        return self.pair_list[wid % self.cfg.list_entries][0]
+
+    def stall_trigger(self, wid: int) -> int:
+        return self.pair_list[wid % self.cfg.list_entries][1]
+
+    def clear_isolation(self, wid: int) -> None:
+        self.pair_list[wid % self.cfg.list_entries][0] = NO_WARP
+
+    def clear_stall(self, wid: int) -> None:
+        self.pair_list[wid % self.cfg.list_entries][1] = NO_WARP
+
+    # -------------------------------------------------------------- epochs
+    def at_high_epoch(self) -> bool:
+        return self.inst_total > 0 and self.inst_total % self.cfg.high_epoch == 0
+
+    def at_low_epoch(self) -> bool:
+        return self.inst_total > 0 and self.inst_total % self.cfg.low_epoch == 0

@@ -1,0 +1,290 @@
+"""Warp scheduling policies: GTO, CCWS, Best-SWL, statPCAL, CIAO-P/T/C.
+
+All policies share the interface the SM simulator drives:
+
+  * ``allow(wid)``        — may this warp issue this cycle? (throttling)
+  * ``is_isolated(wid)``  — are its memory requests redirected to smem?
+  * ``is_bypass(wid)``    — statPCAL L1D bypass?
+  * ``select(ready)``     — pick the next warp (all use GTO order, §V-A)
+  * ``epoch_tick(...)``   — epoch-boundary decisions (Algorithm 1 for CIAO)
+
+CIAO's ``epoch_tick`` is Algorithm 1 with one high-cutoff action per epoch
+(the paper applies one isolate/stall per scheduling event and "repeats this
+step" across epochs) and reverse-order reactivation at low-cutoff epochs
+(§III-C): stalls/redirections are undone newest-first, each guarded by the
+IRS of the interfered warp recorded in the pair list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.interference import InterferenceDetector, NO_WARP
+
+POLICY_NAMES = ("gto", "ccws", "best-swl", "statpcal",
+                "ciao-p", "ciao-t", "ciao-c")
+
+
+class BasePolicy:
+    name = "base"
+
+    def __init__(self, num_warps: int, detector: InterferenceDetector):
+        self.n = num_warps
+        self.det = detector
+        self.last_wid: Optional[int] = None
+
+    # -- issue control ----------------------------------------------------
+    def allow(self, wid: int) -> bool:
+        return True
+
+    def is_isolated(self, wid: int) -> bool:
+        return False
+
+    def is_bypass(self, wid: int) -> bool:
+        return False
+
+    # -- GTO (greedy-then-oldest) selection (shared by all, §V-A) ---------
+    def select(self, ready: Sequence[int]) -> int:
+        if self.last_wid is not None and self.last_wid in ready:
+            return self.last_wid
+        wid = min(ready)          # oldest = lowest WID
+        self.last_wid = wid
+        return wid
+
+    # -- hooks -------------------------------------------------------------
+    def on_mem_event(self, wid: int, event: str) -> None:
+        pass
+
+    def on_warp_done(self, wid: int) -> None:
+        pass
+
+    def epoch_tick(self, active: Sequence[int], finished: Sequence[bool],
+                   mem_util: float = 0.0) -> None:
+        pass
+
+    def num_allowed(self) -> int:
+        return sum(1 for w in range(self.n) if self.allow(w))
+
+
+class GTOPolicy(BasePolicy):
+    name = "gto"
+
+
+class BestSWLPolicy(BasePolicy):
+    """Static wavefront limiting: only the oldest ``limit`` *unfinished*
+    warps run; the best limit is found by an offline sweep (paper profiles
+    per benchmark, column N_wrp of Table II)."""
+
+    name = "best-swl"
+
+    def __init__(self, num_warps, detector, limit: int = 48):
+        super().__init__(num_warps, detector)
+        self.limit = max(1, limit)
+        self.allowed = set(range(min(self.limit, num_warps)))
+        self._next = min(self.limit, num_warps)
+
+    def allow(self, wid: int) -> bool:
+        return wid in self.allowed
+
+    def on_warp_done(self, wid: int) -> None:
+        if wid in self.allowed:
+            self.allowed.discard(wid)
+            if self._next < self.n:
+                self.allowed.add(self._next)
+                self._next += 1
+
+
+class CCWSPolicy(BasePolicy):
+    """Cache-Conscious Wavefront Scheduling [12] (score-based variant).
+
+    Each warp carries a lost-locality score (LLS) bumped on its own VTA hits
+    and decaying over time. When the total score exceeds the cutoff, the
+    *lowest-scoring* warps are throttled — protecting high-locality warps,
+    the exact opposite of CIAO's target selection."""
+
+    name = "ccws"
+
+    def __init__(self, num_warps, detector, base_score: int = 64,
+                 bump: int = 512, budget_per_warp: int = 128):
+        super().__init__(num_warps, detector)
+        self.score = [base_score] * num_warps
+        self.base = base_score
+        self.bump = bump
+        self.budget = budget_per_warp * num_warps
+        self.blocked: set = set()
+
+    def on_mem_event(self, wid: int, event: str) -> None:
+        if event == "vta_hit":
+            self.score[wid] += self.bump
+
+    def allow(self, wid: int) -> bool:
+        return wid not in self.blocked
+
+    def epoch_tick(self, active, finished, mem_util=0.0) -> None:
+        # decay
+        self.score = [max(self.base, s - max(1, s // 8)) for s in self.score]
+        order = sorted((w for w in active if not finished[w]),
+                       key=lambda w: -self.score[w])
+        total = sum(self.score[w] for w in order)
+        self.blocked.clear()
+        run_sum = 0
+        for w in order:
+            run_sum += self.score[w]
+            if run_sum > self.budget and w != order[0]:
+                self.blocked.add(w)
+
+
+class StatPCALPolicy(BestSWLPolicy):
+    """statPCAL [27]-style bypass scheme: static limit like Best-SWL, but
+    when L2/DRAM bandwidth is underutilized the throttled warps are released
+    in *bypass* mode (skip L1D, go straight to the memory hierarchy)."""
+
+    name = "statpcal"
+
+    def __init__(self, num_warps, detector, limit: int = 48,
+                 util_threshold: float = 0.6):
+        super().__init__(num_warps, detector, limit)
+        self.util_threshold = util_threshold
+        self.bypass_active = False
+
+    def allow(self, wid: int) -> bool:
+        return wid in self.allowed or self.bypass_active
+
+    def is_bypass(self, wid: int) -> bool:
+        return self.bypass_active and wid not in self.allowed
+
+    def epoch_tick(self, active, finished, mem_util=0.0) -> None:
+        self.bypass_active = mem_util < self.util_threshold
+
+
+@dataclasses.dataclass
+class WarpFlags:
+    v: int = 1   # 1 = active, 0 = stalled
+    i: int = 0   # 1 = isolated (memory requests redirected to smem)
+
+
+class CIAOPolicy(BasePolicy):
+    """Algorithm 1. mode: 'p' (isolate only), 't' (throttle only), 'c' (both)."""
+
+    def __init__(self, num_warps, detector, mode: str = "c"):
+        super().__init__(num_warps, detector)
+        assert mode in ("p", "t", "c")
+        self.mode = mode
+        self.name = f"ciao-{mode}"
+        self.flags = [WarpFlags() for _ in range(num_warps)]
+        self.stall_stack: List[int] = []      # reverse-order reactivation
+        self.isolate_stack: List[int] = []
+
+    # -- state queries ------------------------------------------------------
+    def allow(self, wid: int) -> bool:
+        return self.flags[wid].v == 1
+
+    def is_isolated(self, wid: int) -> bool:
+        return self.flags[wid].i == 1
+
+    # -- Algorithm 1 --------------------------------------------------------
+    # IRS decisions use the *high-epoch windowed* snapshot (Eq. 1 over the
+    # last high-cutoff epoch): "CIAO should track the latest IRS_i" (§IV-A).
+    # The same signal gates reactivation (against low-cutoff), giving one
+    # high-epoch worth of hysteresis: once an interferer is isolated or
+    # stalled, the interfered warp's next window shows the true residual
+    # interference and the action is undone if it fell below low-cutoff.
+    def _n_active(self, active, finished) -> int:
+        return max(1, sum(1 for w in active
+                          if self.flags[w].v and not finished[w]))
+
+    def low_epoch_tick(self, active, finished) -> None:
+        # Reactivation uses the *cumulative* IRS of Algorithm 1 verbatim
+        # (VTAHit[k]/(InstNo/ActiveWarpNo) with per-kernel counters):
+        # actions persist until the trigger's rate dilutes below low-cutoff
+        # or the trigger finishes — matching the paper's phase-granular
+        # behaviour (Fig. 9) and preventing isolate/un-isolate oscillation.
+        cfg = self.det.cfg
+        n_act = self._n_active(active, finished)
+        # reactivate stalled warps, newest first (lines 4-10)
+        if self.stall_stack:
+            w = self.stall_stack[-1]
+            k = self.det.stall_trigger(w)
+            if k == NO_WARP or finished[k] or \
+                    self.det.irs(k, n_act) <= cfg.low_cutoff:
+                self.stall_stack.pop()
+                self.flags[w].v = 1
+                self.det.clear_stall(w)
+        # un-redirect isolated warps, newest first (lines 11-19)
+        if self.isolate_stack:
+            w = self.isolate_stack[-1]
+            if self.flags[w].v == 0:
+                return    # stalled while isolated: reactivate first
+            k = self.det.isolation_trigger(w)
+            if k == NO_WARP or finished[k] or \
+                    self.det.irs(k, n_act) <= cfg.low_cutoff:
+                self.isolate_stack.pop()
+                self.flags[w].i = 0
+                self.det.clear_isolation(w)
+
+    def high_epoch_tick(self, active, finished) -> None:
+        cfg = self.det.cfg
+        alive = [w for w in active
+                 if self.flags[w].v and not finished[w]]
+        if len(alive) <= 1:
+            return
+        # most-interfered active warp first (lines 20-28; one action/epoch)
+        scored = sorted(alive, key=lambda w: -self.det.irs_high(w))
+        for i in scored:
+            if self.det.irs_high(i) <= cfg.high_cutoff:
+                break
+            j = self.det.most_interfering(i)
+            if j == NO_WARP or j == i or finished[j]:
+                continue
+            if self.mode in ("p", "c") and self.flags[j].i == 0 \
+                    and self.flags[j].v == 1:
+                self.flags[j].i = 1
+                self.det.record_isolation(j, i)
+                self.isolate_stack.append(j)
+                return
+            if self.mode in ("t", "c") and self.flags[j].v == 1 \
+                    and (self.flags[j].i == 1 or self.mode == "t"):
+                if sum(1 for w in alive if w != j) < 1:
+                    return
+                self.flags[j].v = 0
+                self.det.record_stall(j, i)
+                self.stall_stack.append(j)
+                return
+        return
+
+    def stall_directly(self, j: int, trigger: int) -> bool:
+        """§III-C: stall an interferer whose redirection stopped being
+        effective (shared-memory thrash / reserve-pool defer). Used by the
+        serving engine; the SM simulator reaches the same state through
+        high_epoch_tick."""
+        if self.mode == "p" or self.flags[j].v == 0:
+            return False
+        self.flags[j].v = 0
+        self.det.record_stall(j, trigger)
+        self.stall_stack.append(j)
+        return True
+
+    def epoch_tick(self, active, finished, mem_util=0.0) -> None:
+        n_active = sum(1 for w in active
+                       if self.flags[w].v and not finished[w])
+        low, high = self.det.poll_epochs(n_active)
+        if low:
+            self.low_epoch_tick(active, finished)
+        if high:
+            self.high_epoch_tick(active, finished)
+
+
+def make_policy(name: str, num_warps: int, detector: InterferenceDetector,
+                **kw) -> BasePolicy:
+    name = name.lower()
+    if name == "gto":
+        return GTOPolicy(num_warps, detector)
+    if name == "ccws":
+        return CCWSPolicy(num_warps, detector, **kw)
+    if name == "best-swl":
+        return BestSWLPolicy(num_warps, detector, **kw)
+    if name == "statpcal":
+        return StatPCALPolicy(num_warps, detector, **kw)
+    if name in ("ciao-p", "ciao-t", "ciao-c"):
+        return CIAOPolicy(num_warps, detector, mode=name[-1])
+    raise ValueError(name)

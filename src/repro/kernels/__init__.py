@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle).
+Validated on CPU in interpret=True mode; TPU v5e is the lowering target.
+"""

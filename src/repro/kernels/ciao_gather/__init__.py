@@ -1,0 +1,1 @@
+from repro.kernels.ciao_gather.ops import ciao_gather  # noqa: F401

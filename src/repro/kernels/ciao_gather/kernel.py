@@ -1,0 +1,121 @@
+"""CIAO software-managed VMEM cache kernel (the paper's §III-B on TPU).
+
+Irregular row-gather (embedding rows / KV pages / SpMV index arrays — the
+paper's §VI motivation) from an HBM-resident table, staged through a
+**two-partition direct-mapped VMEM block cache**:
+
+  * partition 0 ("L1D")        — slots [0, c_main)
+  * partition 1 ("unused smem") — slots [c_main, c_main + c_iso): request
+    *streams* flagged as interferers by the host-side
+    :class:`InterferenceDetector` are redirected here, exactly like CIAO
+    redirects interfering warps — isolation is structural (the partition is
+    a pure function of the stream's isolation bit), so the single-copy
+    coherence invariant of §IV-B holds by construction.
+
+Tags live in **SMEM scratch**, data rows in **VMEM scratch** — the TPU
+analogue of the paper's tags-in-the-opposite-bank-group placement: a tag
+probe and the data access touch different memories and proceed in parallel.
+
+Per-stream hit/miss counters are emitted (SMEM-accumulated) as the VTA-style
+feedback the host scheduler consumes.
+
+NOTE: rows are fetched with dynamic loads from an ANY-space ref; a
+production TPU build would issue ``pltpu.make_async_copy`` DMAs with
+double-buffering — semantics identical, validated here in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, stream_ref, iso_ref, table_ref, out_ref,
+                   stats_ref, tags_scr, data_scr, cnt_scr, *,
+                   block_t: int, c_main: int, c_iso: int, num_streams: int,
+                   num_blocks: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        tags_scr[...] = jnp.full_like(tags_scr, -1)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    def body(i, _):
+        idx = idx_ref[i]
+        stream = stream_ref[i]
+        iso = iso_ref[stream]
+        # partition choice: direct-mapped slot in main or isolated region
+        slot_main = jax.lax.rem(idx, jnp.int32(c_main))
+        slot_iso = jnp.int32(c_main) + jax.lax.rem(idx, jnp.int32(max(c_iso, 1)))
+        slot = jnp.where(iso > 0, slot_iso, slot_main)
+        hit = tags_scr[slot] == idx
+
+        def on_hit():
+            return pl.load(data_scr, (pl.ds(slot, 1), slice(None)))
+
+        def on_miss():
+            row = pl.load(table_ref, (pl.ds(idx, 1), slice(None)))
+            pl.store(data_scr, (pl.ds(slot, 1), slice(None)), row)
+            tags_scr[slot] = idx
+            return row
+
+        row = jax.lax.cond(hit, on_hit, on_miss)
+        pl.store(out_ref, (pl.ds(i, 1), slice(None)), row)
+        # per-stream hit/miss counters (VTA-style feedback)
+        col = jnp.where(hit, 0, 1)
+        cnt_scr[stream, col] += 1
+        return 0
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+    @pl.when(step == num_blocks - 1)
+    def _emit():
+        stats_ref[...] = cnt_scr[...]
+
+
+def ciao_gather_kernel(table, indices, streams, iso_map, *,
+                       c_main: int = 256, c_iso: int = 64,
+                       block_t: int = 128, interpret: bool = False):
+    """table: (N, D); indices/streams: (T,) int32; iso_map: (S,) int32.
+    Returns (out (T, D), stats (S, 2) int32 [hits, misses] per stream)."""
+    t = indices.shape[0]
+    n, d = table.shape
+    num_streams = iso_map.shape[0]
+    nb = t // block_t
+
+    kernel = functools.partial(
+        _gather_kernel, block_t=block_t, c_main=c_main, c_iso=c_iso,
+        num_streams=num_streams, num_blocks=nb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_t,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((num_streams,), lambda i: (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((num_streams, 2), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), table.dtype),
+            jax.ShapeDtypeStruct((num_streams, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((c_main + max(c_iso, 1),), jnp.int32),   # tags
+            pltpu.VMEM((c_main + max(c_iso, 1), d), table.dtype),  # data
+            pltpu.SMEM((num_streams, 2), jnp.int32),            # counters
+        ],
+        interpret=interpret,
+    )(indices, streams, iso_map, table)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the CIAO cached gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ciao_gather.kernel import ciao_gather_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "c_main", "c_iso", "block_t", "interpret"))
+def ciao_gather(table, indices, streams, iso_map, *, c_main: int = 256,
+                c_iso: int = 64, block_t: int = 128,
+                interpret: bool = False):
+    """Gather ``table[indices]`` through the two-partition VMEM cache.
+
+    table: (N, D); indices: (T,) int32 row ids; streams: (T,) int32 stream
+    id per request; iso_map: (S,) int32 isolation bits from the host
+    detector. Returns (out (T, D), stats (S, 2) [hits, misses])."""
+    t = indices.shape[0]
+    s = iso_map.shape[0]
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    if pad:
+        # route padding to a phantom stream so real stats stay exact
+        indices = jnp.pad(indices, (0, pad), constant_values=indices[-1])
+        streams = jnp.pad(streams, (0, pad), constant_values=s)
+        iso_map = jnp.pad(iso_map, (0, 1))
+    out, stats = ciao_gather_kernel(
+        table, indices.astype(jnp.int32), streams.astype(jnp.int32),
+        iso_map.astype(jnp.int32), c_main=c_main, c_iso=c_iso, block_t=bt,
+        interpret=interpret)
+    if pad:
+        out = out[:t]
+        stats = stats[:s]
+    return out, stats

@@ -1,0 +1,30 @@
+"""Oracles for the CIAO gather kernel.
+
+* ``gather_ref``: the output contract — a plain table gather.
+* ``cache_sim_ref``: numpy simulation of the two-partition direct-mapped
+  cache, producing the exact per-stream hit/miss counters the kernel must
+  emit (same replacement policy, same partition function).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def gather_ref(table, indices):
+    return jnp.take(table, indices, axis=0)
+
+
+def cache_sim_ref(indices, streams, iso_map, *, c_main: int, c_iso: int,
+                  num_streams: int):
+    tags = -np.ones(c_main + max(c_iso, 1), np.int64)
+    stats = np.zeros((num_streams, 2), np.int64)
+    for idx, st in zip(np.asarray(indices), np.asarray(streams)):
+        iso = iso_map[st] > 0
+        slot = (c_main + idx % max(c_iso, 1)) if iso else idx % c_main
+        if tags[slot] == idx:
+            stats[st, 0] += 1
+        else:
+            stats[st, 1] += 1
+            tags[slot] = idx
+    return stats

@@ -1,0 +1,41 @@
+"""jit'd wrapper: GQA decode attention against a (B, S, Hkv, D) cache."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "scale", "block_kv", "interpret"))
+def decode_attention(q, cache_k, cache_v, lengths, *, softcap: float = 0.0,
+                     scale: float = 0.0, block_kv: int = 256,
+                     interpret: bool = False):
+    """q: (B, 1, Hq, D); cache_k/v: (B, S, Hkv, D); lengths: (B,) number of
+    valid cache positions per sequence. Returns (B, 1, Hq, D)."""
+    b, _, hq, d = q.shape
+    s, hkv = cache_k.shape[1], cache_k.shape[2]
+    g = hq // hkv
+    scale = scale or 1.0 / math.sqrt(d)
+
+    k = jnp.repeat(cache_k, g, axis=2).transpose(0, 2, 1, 3).reshape(
+        b * hq, s, d)
+    v = jnp.repeat(cache_v, g, axis=2).transpose(0, 2, 1, 3).reshape(
+        b * hq, s, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, 1, d)
+    lens = jnp.repeat(lengths, hq).astype(jnp.int32)
+
+    bkv = min(block_kv, s)
+    pad = (-s) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+
+    out = decode_attention_kernel(qf, k, v, lens, scale=scale,
+                                  softcap=softcap, block_kv=bkv,
+                                  interpret=interpret)
+    return out.reshape(b, hq, 1, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, lengths, *, scale: float = 0.0, softcap: float = 0.0):
+    """q: (BH, 1, D); k, v: (BH, S, D); lengths: (BH,)."""
+    d = q.shape[-1]
+    scale = scale or 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(k.shape[1])[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

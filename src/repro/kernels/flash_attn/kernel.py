@@ -1,0 +1,119 @@
+"""Flash attention TPU kernel: tiled online-softmax with causal/local block
+skipping.
+
+Grid = (batch*q_heads, num_q_blocks, num_kv_blocks); the KV axis is the
+innermost (sequential on TPU), so the (m, l, acc) running state lives in
+VMEM scratch that persists across KV steps. Blocks are MXU-aligned
+(block_q x block_kv = 128 x 128 by default, head_dim loaded whole).
+
+Causal/local masking is applied per tile; *fully-masked tiles are skipped*
+(pl.when guards the matmuls) — on hardware the skipped tile costs only grid
+overhead, recovering the ~2x triangular saving the XLA chunked-scan path
+cannot express (see DESIGN.md / EXPERIMENTS.md §Perf). GQA is handled by
+mapping each q-head's grid row onto its kv head in the BlockSpec index_map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, softcap: float,
+                 block_q: int, block_kv: int, num_kv_blocks: int,
+                 seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # tile relevance: causal -> skip tiles entirely above the diagonal;
+    # local  -> also skip tiles entirely outside the window
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+        if window:
+            relevant &= (k_start + block_kv - 1) >= (q_start - window + 1)
+
+    @pl.when(relevant if not isinstance(relevant, bool) else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)          # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < seq_len
+        if causal:
+            valid &= kpos <= qpos
+            if window:
+                valid &= (qpos - kpos) < window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool,
+                           window: int, softcap: float,
+                           true_skv: int = 0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D) — kv heads already broadcast.
+    Sq/Skv must be multiples of the block sizes (ops.py pads);
+    ``true_skv`` masks the KV padding."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    nq = sq // block_q
+    nkv = skv // block_kv
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv,
+        num_kv_blocks=nkv, seq_len=true_skv or skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

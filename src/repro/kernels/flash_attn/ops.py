@@ -1,0 +1,52 @@
+"""jit'd public wrapper: (B, S, H, D) GQA attention via the Pallas kernel.
+
+Handles GQA head broadcast, scale defaults, padding to block multiples, and
+the interpret flag (CPU validation)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_kv",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float = 0.0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale or 1.0 / math.sqrt(d)
+
+    # broadcast kv heads to q heads, fold heads into batch
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
+
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    pad_q = (-sq) % bq
+    pad_kv = (-skv) % bkv
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+
+    out = flash_attention_kernel(
+        qf, kf, vf, scale=scale, causal=causal, window=window,
+        softcap=softcap, true_skv=skv, block_q=bq, block_kv=bkv,
+        interpret=interpret)
+    out = out[:, :sq]
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (independent full-softmax impl)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, scale: float = 0.0, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D). fp32 softmax over all keys."""
+    d = q.shape[-1]
+    scale = scale or 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    valid = jnp.ones((sq, skv), bool)
+    if causal:
+        valid &= kpos <= qpos
+        if window:
+            valid &= (qpos - kpos) < window
+    s = jnp.where(valid[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

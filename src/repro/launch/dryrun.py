@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); this module is the only place the 512 placeholder
+devices are created — tests and benches see 1 device.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single pod / 2x16x16 pod pair),
+  2. lowers train_step (train_4k) or prefill/decode serve steps with
+     ShapeDtypeStruct inputs sharded per the logical rules,
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses the post-SPMD HLO for collective ops and sums their bytes,
+  5. writes artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, ARCH_NAMES, get_config, shapes_for
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.parallel.sharding import make_env, tree_shardings
+from repro.train import train_step as TS
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, run: RunConfig,
+               rule_overrides=()):
+    """Build and lower the cell's step function. Returns jax.stages.Lowered."""
+    mode = shape.mode
+    rules_mode = ("long_decode" if (mode == "decode" and shape.seq_len > 100_000)
+                  else mode)
+    env = make_env(mesh, rules_mode,
+                   overrides=tuple(cfg.sharding_overrides)
+                   + tuple(rule_overrides))
+
+    if mode == "train":
+        step = TS.make_train_step(cfg, run, env)
+        npod = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+        state_struct = TS.train_state_struct(cfg, run, npod=npod)
+        state_specs = TS.state_logical_specs(cfg, run)
+        state_sh = tree_shardings(env, state_specs, state_struct)
+        batch_struct = M.input_specs(cfg, shape, run)
+        batch_sh = tree_shardings(env, TS.batch_logical_specs(cfg, "train"),
+                                  batch_struct)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+        return jitted.lower(state_struct, batch_struct), env
+
+    params_struct = M.param_shapes(cfg, run)
+    p_sh = tree_shardings(env, M.param_specs(cfg), params_struct)
+    if mode == "prefill":
+        prefill_fn, _ = TS.make_serve_steps(cfg, run, env)
+        batch_struct = M.input_specs(cfg, shape, run)
+        batch_sh = tree_shardings(env, TS.batch_logical_specs(cfg, "prefill"),
+                                  batch_struct)
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh))
+        return jitted.lower(params_struct, batch_struct), env
+
+    # decode
+    _, decode_fn = TS.make_serve_steps(cfg, run, env)
+    specs = M.input_specs(cfg, shape, run)
+    bls = TS.batch_logical_specs(cfg, "decode")
+    tok_sh = tree_shardings(env, bls["token"], specs["token"])
+    pos_sh = tree_shardings(env, bls["pos"], specs["pos"])
+    cache_sh = tree_shardings(env, bls["cache"], specs["cache"])
+    jitted = jax.jit(decode_fn,
+                     in_shardings=(p_sh, tok_sh, pos_sh, cache_sh),
+                     donate_argnums=(3,))
+    return jitted.lower(params_struct, specs["token"], specs["pos"],
+                        specs["cache"]), env
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             run: Optional[RunConfig] = None, tag: str = "",
+             save: bool = True, verbose: bool = True,
+             rule_overrides=()) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = ALL_SHAPES[shape_name]
+    run = run or RunConfig()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    lowered, env = lower_cell(cfg, shape, mesh, run,
+                              rule_overrides=rule_overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = dict(compiled.cost_analysis() or {})
+    mem = _mem_analysis_dict(compiled)
+    t0 = time.time()
+    hlo = H.analyze(compiled.as_text())
+    t_analyze = time.time() - t0
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "num_devices": mesh.size,
+        "mode": shape.mode,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        # loop-aware per-device numbers (see hlo_analysis.py)
+        "flops_per_device": float(hlo.get("flops", 0.0)),
+        "bytes_per_device": float(hlo.get("bytes", 0.0)),
+        "bytes_hbm_model_per_device": float(hlo.get("bytes_hbm_model", 0.0)),
+        "collectives": hlo,
+        # raw cost_analysis for reference (undercounts while-loop bodies)
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "memory_analysis": mem,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "run_config": dataclasses.asdict(run),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_kind}"
+              + (f" [{tag}]" if tag else ""))
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"flops/dev {result['flops_per_device']:.3e} | "
+              f"bytes/dev {result['bytes_per_device']:.3e} | "
+              f"coll_eff {hlo['collective_total_effective']:.3e}B "
+              f"({hlo['collective_num_ops']} ops)")
+        print(f"   memory: {mem}")
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+        (ARTIFACTS / f"{name}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(ALL_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--tag", default="", help="variant tag for artifacts")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--compression", default=None)
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical=axis[:axis2] sharding-rule override, "
+                         "e.g. --rule act_seq=model --rule p_embed=")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    rule_overrides = []
+    for r in args.rule:
+        k, _, v = r.partition("=")
+        axes = tuple(a for a in v.split(":") if a) or None
+        if axes and len(axes) == 1:
+            axes = axes[0]
+        rule_overrides.append((k, axes))
+
+    overrides = {}
+    if args.remat is not None:
+        overrides["remat_policy"] = args.remat
+    if args.loss_chunk is not None:
+        overrides["loss_chunk"] = args.loss_chunk
+    if args.compression is not None:
+        overrides["gradient_compression"] = args.compression
+    run = dataclasses.replace(RunConfig(), **overrides)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for sh in shapes_for(get_config(arch)):
+                cells.append((arch, sh.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch, sh in cells:
+        for mk in meshes:
+            name = f"{arch}__{sh}__{mk}" + (f"__{args.tag}" if args.tag else "")
+            if args.skip_existing and (ARTIFACTS / f"{name}.json").exists():
+                print(f"-- skip {name} (exists)")
+                continue
+            try:
+                run_cell(arch, sh, mk, run=run, tag=args.tag,
+                         rule_overrides=tuple(rule_overrides))
+            except Exception as e:  # record and continue
+                failures.append((name, repr(e)[:500]))
+                print(f"!! FAIL {name}: {e}")
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for n, e in failures:
+            print(" ", n, e)
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

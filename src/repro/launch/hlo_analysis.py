@@ -1,0 +1,299 @@
+"""Loop-aware analysis of post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation **once**, so anything
+inside a ``while`` body (every ``lax.scan`` — i.e. our layer stacks, KV-chunk
+scans, SSD chunk scans, grad-accumulation) is undercounted by its trip count.
+This module re-derives the three roofline inputs from the HLO text with loop
+multipliers applied:
+
+  * ``flops``       — 2 * prod(output dims) * prod(contracting dims) for every
+                      ``dot`` (+ convolution), x loop multiplier. Elementwise
+                      FLOPs are excluded (documented; matches MFU convention).
+  * ``bytes``       — per top-level op: output + operand bytes (fusion bodies
+                      excluded — a fusion's operands/results are the real HBM
+                      boundary), slice-like ops counted at slice size,
+                      x loop multiplier. An *upper bound* on HBM traffic on a
+                      real TPU (CPU-backend fusion is weaker than TPU).
+  * ``collectives`` — per kind, effective link bytes (ring multipliers:
+                      all-reduce 2(K-1)/K, all-gather/reduce-scatter/
+                      all-to-all (K-1)/K, collective-permute 1), x loop
+                      multiplier. K parsed from replica_groups.
+
+Loop multipliers: computations are walked from ENTRY; a ``while`` body/cond
+inherits caller_multiplier x trip_count, where trip_count is recovered from
+the loop condition's integer constant (standard 0..N jax scan lowering).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLL_FACTORS = {
+    "all-reduce": lambda k: 2.0 * (k - 1) / k,
+    "all-gather": lambda k: (k - 1) / k,
+    "reduce-scatter": lambda k: (k - 1) / k,
+    "all-to-all": lambda k: (k - 1) / k,
+    "collective-permute": lambda k: 1.0,
+}
+COLLECTIVE_KINDS = tuple(COLL_FACTORS)
+
+# ops whose operands are not full-size reads
+_SLICE_LIKE = ("dynamic-slice", "slice", "gather")
+_UPDATE_LIKE = ("dynamic-update-slice", "scatter")
+_NO_TRAFFIC = ("parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota", "partition-id", "replica-id",
+               "while", "conditional", "call", "custom-call")
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_PARAM_DECL = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|[a-z0-9]+\[[0-9,]*\])")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                     r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_elems_bytes(txt: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every shape token in txt (handles tuples)."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_TOKEN.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_shape_dims(txt: str) -> Optional[List[int]]:
+    m = _SHAPE_TOKEN.search(txt)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+class Op:
+    __slots__ = ("name", "shape_txt", "kind", "rest")
+
+    def __init__(self, name, shape_txt, kind, rest):
+        self.name, self.shape_txt, self.kind, self.rest = name, shape_txt, kind, rest
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.params: Dict[str, str] = {}
+        self.ops: List[Op] = []
+        self.symbols: Dict[str, str] = {}     # name -> shape text
+        self.callees: List[Tuple[str, str]] = []  # (relation, callee)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        hm = _COMP_HEADER.match(stripped)
+        if hm and stripped.endswith("{"):
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY"):
+                entry = cur.name
+            header = stripped
+            for pname, pshape in _PARAM_DECL.findall(header):
+                cur.params[pname] = pshape
+                cur.symbols[pname] = pshape
+            continue
+        if stripped == "}" or cur is None:
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, shape_txt, kind, rest = om.groups()
+        cur.symbols[name] = shape_txt
+        cur.ops.append(Op(name, shape_txt, kind, rest))
+        for cm in _CALLED.finditer(rest):
+            rel = cm.group(0).split("=")[0]
+            for callee in cm.group(1).split(","):
+                cur.callees.append((rel, callee.strip().lstrip("%")))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the loop condition's integer constant (0..N scans)."""
+    best = 1
+    for op in cond.ops:
+        txt = f"{op.kind}({op.rest}"
+        for c in _CONST_INT.findall(txt):
+            best = max(best, int(c))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """computation -> execution multiplier, walking while bodies."""
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_called: set = set()
+    for c in comps.values():
+        for rel, callee in c.callees:
+            if rel in ("calls", "to_apply"):
+                fusion_called.add(callee)
+
+    # BFS from entry through while/conditional/call structure
+    import collections
+    q = collections.deque([entry])
+    seen = {entry}
+    while q:
+        name = q.popleft()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for op in comp.ops:
+            if op.kind == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                for callee, f in ((body, trips), (cond, trips + 1)):
+                    if callee and callee in comps:
+                        mult[callee] = mult.get(callee, 0.0) + m * f
+                        if callee not in seen:
+                            seen.add(callee)
+                            q.append(callee)
+        # non-while calls (conditional branches etc.): multiplier x1
+        for rel, callee in comp.callees:
+            if rel in ("body", "condition", "calls", "to_apply"):
+                continue
+            if callee in comps:
+                mult[callee] = mult.get(callee, 0.0) + m
+                if callee not in seen:
+                    seen.add(callee)
+                    q.append(callee)
+    # drop fusion bodies from the executable set
+    for f in fusion_called:
+        mult.pop(f, None)
+    return mult
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.shape_txt)
+    lhs_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _OPERAND.findall(op.rest.split(")")[0])
+    if not operands:
+        return 0.0
+    lhs_shape = comp.symbols.get(operands[0])
+    if lhs_shape is None:
+        return 2.0 * out_elems  # unknown operand; degrade gracefully
+    dims = _first_shape_dims(lhs_shape) or []
+    contract = 1
+    if lhs_m:
+        for d in lhs_m.group(1).split(","):
+            if d and int(d) < len(dims):
+                contract *= dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    _, out_b = _shape_elems_bytes(op.shape_txt)
+    if op.kind in _SLICE_LIKE:
+        return 2.0 * out_b
+    if op.kind in _UPDATE_LIKE:
+        return 3.0 * out_b
+    operand_names = _OPERAND.findall(op.rest.split("), ")[0])
+    in_b = 0
+    for on in operand_names:
+        sh = comp.symbols.get(on)
+        if sh is not None:
+            in_b += _shape_elems_bytes(sh)[1]
+    return float(out_b + in_b)
+
+
+def _group_size(rest: str) -> int:
+    gi = _GROUPS_IOTA.search(rest)
+    if gi:
+        return int(gi.group(2))
+    gl = _GROUPS_LIST.search(rest)
+    if gl:
+        return len([x for x in gl.group(1).split(",") if x.strip()])
+    return 1
+
+
+def analyze(hlo: str) -> Dict[str, Any]:
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        return {"error": "no entry computation"}
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    bytes_total = 0.0
+    bytes_hbm_model = 0.0   # TPU-fusion model: dot/conv/slice/DUS/collective
+    coll_eff: Dict[str, float] = {}
+    coll_raw: Dict[str, float] = {}
+    coll_ops = 0
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            kind = op.kind
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if base_kind in COLLECTIVE_KINDS:
+                _, b = _shape_elems_bytes(op.shape_txt)
+                k = _group_size(op.rest)
+                if k > 1:
+                    coll_eff[base_kind] = coll_eff.get(base_kind, 0.0) + \
+                        m * b * COLL_FACTORS[base_kind](k)
+                    coll_raw[base_kind] = coll_raw.get(base_kind, 0.0) + m * b
+                    coll_ops += 1
+                ob = m * _op_bytes(op, comp)
+                bytes_total += ob
+                bytes_hbm_model += ob
+                continue
+            if kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+                bytes_hbm_model += m * _op_bytes(op, comp)
+            elif kind in _SLICE_LIKE or kind in _UPDATE_LIKE:
+                bytes_hbm_model += m * _op_bytes(op, comp)
+            if kind in _NO_TRAFFIC:
+                continue
+            bytes_total += m * _op_bytes(op, comp)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_total,
+        "bytes_hbm_model": bytes_hbm_model,
+        "collective_bytes_effective": coll_eff,
+        "collective_bytes_raw": coll_raw,
+        "collective_total_effective": sum(coll_eff.values()),
+        "collective_total_raw": sum(coll_raw.values()),
+        "collective_num_ops": coll_ops,
+        "num_computations": len(comps),
+        "num_executable": len(mult),
+        "loop_multipliers": {k: v for k, v in sorted(
+            mult.items(), key=lambda kv: -kv[1])[:8] if v > 1.0},
+    }

@@ -1,0 +1,26 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a ``pod`` axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None):
+    """Small mesh over whatever devices exist (CPU tests / subprocesses)."""
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    arr = np.array(devices).reshape(n // model, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))

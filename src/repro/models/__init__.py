@@ -1,0 +1,12 @@
+from repro.models import model  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params,
+    param_specs,
+    forward_train,
+    loss_fn,
+    init_cache,
+    cache_specs,
+    prefill,
+    decode_step,
+    input_specs,
+)

@@ -1,0 +1,234 @@
+"""GQA attention: training/prefill (chunked online-softmax) + decode paths.
+
+Supports every attention variant in the assigned pool: grouped/multi-query
+heads, sliding-window (local) masking, prefix-LM masks (paligemma), logit
+soft-capping (gemma2), qk-norm (qwen3), biases (seamless), cross-attention
+(enc-dec), and ring-buffer local KV caches for O(window) long-context decode.
+
+The training path uses an online-softmax scan over KV chunks (flash-attention
+algorithm expressed in jnp) so 32k-token prefill never materializes an S^2
+score tensor — this is also what the Pallas ``flash_attn`` kernel computes;
+``kernels/flash_attn/ref.py`` delegates here.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import nd_init, rms_headnorm, rope, softcap
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- init
+def attn_init(cfg, key, dtype, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": nd_init(ks[0], (d, hq, dh), d, dtype),
+        "wk": nd_init(ks[1], (d, hkv, dh), d, dtype),
+        "wv": nd_init(ks[2], (d, hkv, dh), d, dtype),
+        "wo": nd_init(ks[3], (hq, dh, d), hq * dh, dtype),
+    }
+    s = {
+        "wq": ("p_embed", "p_heads", "p_none"),
+        "wk": ("p_embed", "p_heads", "p_none"),
+        "wv": ("p_embed", "p_heads", "p_none"),
+        "wo": ("p_heads", "p_none", "p_embed"),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((hq, dh), dtype)
+        p["bk"] = jnp.zeros((hkv, dh), dtype)
+        p["bv"] = jnp.zeros((hkv, dh), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+        s.update({"bq": ("p_heads", "p_none"), "bk": ("p_heads", "p_none"),
+                  "bv": ("p_heads", "p_none"), "bo": ("p_embed",)})
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+        s.update({"q_norm": ("p_none",), "k_norm": ("p_none",)})
+    return p, s
+
+
+def _scale(cfg) -> float:
+    return cfg.query_scale or 1.0 / math.sqrt(cfg.head_dim)
+
+
+def project_qkv(env, cfg, params, x, kv_x=None, *, positions=None,
+                kv_positions=None, use_rope=True):
+    """Project to (q, k, v); applies qk-norm and RoPE (at absolute positions,
+    so cached K never needs re-rotation)."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.use_qk_norm:
+        q = rms_headnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_headnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions,
+                 cfg.rope_theta)
+    q = env.constrain(q, "act_batch", "act_seq", "act_heads", None)
+    # k/v use the kv-seq axis: under sequence-parallel attention (act_seq
+    # sharded) they are gathered once per layer here rather than once per
+    # kv-chunk inside the online-softmax scan
+    k = env.constrain(k, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    v = env.constrain(v, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def output_proj(env, cfg, params, o):
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    if cfg.attn_bias:
+        out = out + params["bo"]
+    return env.constrain(out, "act_batch", "act_seq", "act_embed")
+
+
+# --------------------------------------------------------------- masking
+def _mask_block(mask_kind: str, qpos, kpos, window: int, prefix_len):
+    """(Sq, C) boolean validity for a KV block. qpos/kpos absolute."""
+    q = qpos[:, None]
+    kk = kpos[None, :]
+    if mask_kind == "full":
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    valid = kk <= q
+    if mask_kind == "local" and window:
+        valid &= (q - kk) < window
+    if mask_kind == "prefix" and prefix_len is not None:
+        valid |= kk < prefix_len
+    return valid
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    want = min(want if want > 0 else 1024, s)
+    while s % want:
+        want -= 1
+    return max(want, 1)
+
+
+# ---------------------------------------------- train / prefill attention
+def attention_core(env, cfg, q, k, v, *, mask_kind: str, q_offset: int = 0,
+                   prefix_len=None, chunk: int = 0):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh). Returns (B, Sq, Hq, Dh).
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = _scale(cfg)
+    qg = q.reshape(b, sq, hkv, g, dh)
+    qpos = q_offset + jnp.arange(sq)
+
+    c = _pick_chunk(skv, chunk or (skv if skv <= 2048 else 1024))
+    nck = skv // c
+    ks = k.reshape(b, nck, c, hkv, dh)
+    vs = v.reshape(b, nck, c, hkv, dh)
+
+    def scan_body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, ci = inputs
+        kpos = ci * c + jnp.arange(c)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cfg.attn_logit_softcap)
+        valid = _mask_block(mask_kind, qpos, kpos, cfg.local_window, prefix_len)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    if nck == 1:
+        (m, l, acc), _ = scan_body((m0, l0, a0),
+                                   (ks[:, 0], vs[:, 0], jnp.asarray(0)))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            scan_body, (m0, l0, a0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), jnp.arange(nck)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+# -------------------------------------------------------------- KV caches
+def write_full_cache(cache_k, cache_v, k, v, pos: int = 0):
+    """Write a [pos, pos+S) stripe into a full-length cache."""
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    return cache_k, cache_v
+
+
+def write_ring_cache(cache_k, cache_v, k, v):
+    """Write the tail of a prefill's k/v into a ring buffer of size W.
+    Slot for absolute position p is p % W. k: (B, S, H, D), S static."""
+    w = cache_k.shape[1]
+    s = k.shape[1]
+    n = min(s, w)
+    idx = (jnp.arange(s - n, s)) % w
+    cache_k = cache_k.at[:, idx].set(k[:, s - n:].astype(cache_k.dtype))
+    cache_v = cache_v.at[:, idx].set(v[:, s - n:].astype(cache_v.dtype))
+    return cache_k, cache_v
+
+
+def decode_write(cache_k, cache_v, k_t, v_t, pos, ring: bool):
+    """Insert one token (B, 1, H, D) at absolute position ``pos`` (traced)."""
+    w = cache_k.shape[1]
+    slot = (pos % w) if ring else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_t.astype(cache_k.dtype), slot, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_t.astype(cache_v.dtype), slot, 1)
+    return cache_k, cache_v
+
+
+def decode_attend(env, cfg, q_t, cache_k, cache_v, pos, *, ring: bool,
+                  window: int = 0, cross: bool = False):
+    """One-token attention against a cache.
+
+    q_t: (B, 1, Hq, Dh); cache: (B, S, Hkv, Dh); pos: current absolute
+    position (the new token's index, already written to the cache).
+    """
+    b, _, hq, dh = q_t.shape
+    s, hkv = cache_k.shape[1], cache_k.shape[2]
+    g = hq // hkv
+    qg = q_t.reshape(b, hkv, g, dh)
+    scale = _scale(cfg)
+
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    pos_b = pos[:, None]                                     # (B, 1)
+    slots = jnp.arange(s)[None, :]                           # (1, S)
+    if cross:
+        valid = jnp.ones((q_t.shape[0], s), bool)
+    elif ring:
+        abs_pos = pos_b - jnp.mod(pos_b - slots, s)
+        valid = abs_pos >= 0
+        if window and window < s:
+            valid &= (pos_b - abs_pos) < window
+    else:
+        valid = slots <= pos_b
+        if window:
+            valid &= (pos_b - slots) < window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    scores = env.constrain(scores, "act_batch", "act_kv_heads", None, "act_kv_seq")
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, dh).astype(q_t.dtype)

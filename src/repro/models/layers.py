@@ -1,0 +1,159 @@
+"""Primitive layers: inits, RMSNorm, RoPE, MLP variants, softcap.
+
+Every ``*_init`` returns ``(params, specs)`` — two parallel pytrees, the
+second holding tuples of logical axis names (see parallel/sharding.py) so the
+whole parameter tree's shardings are derivable without tracing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def nd_init(key, shape, fan_in, dtype):
+    """Truncated-normal, 1/sqrt(fan_in) scaled (standard LM init)."""
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def softcap(x, cap: float):
+    """gemma2-style tanh logit soft-capping."""
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.zeros((dim,), jnp.float32)}, {"scale": ("p_none",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+def rms_headnorm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (qwen3): normalize over head_dim with learned scale."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale)).astype(dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float):
+    """Apply rotary embedding. x: (..., S, H, D) or (..., H, D) w/ scalar pos.
+
+    positions broadcast against x's sequence dims: shape (..., S) matching
+    x.shape[:-2].
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) * 2.0 / d)
+    angles = positions.astype(jnp.float32)[..., None, None] * freq  # (...,S,1,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+GATED = ("swiglu", "geglu")
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    gated = activation in GATED
+    p = {"w_in": nd_init(ks[0], (d_model, d_ff), d_model, dtype),
+         "w_out": nd_init(ks[1], (d_ff, d_model), d_ff, dtype)}
+    s = {"w_in": ("p_ff_in", "p_mlp"), "w_out": ("p_mlp", "p_embed")}
+    if gated:
+        p["w_gate"] = nd_init(ks[2], (d_model, d_ff), d_model, dtype)
+        s["w_gate"] = ("p_ff_in", "p_mlp")
+    return p, s
+
+
+def mlp_activate(activation: str, h, g=None):
+    if activation == "swiglu":
+        return jax.nn.silu(g) * h
+    if activation == "geglu":
+        return jax.nn.gelu(g, approximate=True) * h
+    if activation == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    if activation == "squared_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(activation)
+
+
+def mlp_apply(env, params, x, activation: str):
+    h = x @ params["w_in"]
+    g = x @ params["w_gate"] if activation in GATED else None
+    # seq dim uses act_seq (None under plain TP; sharded under sequence
+    # parallelism, where first-wins dedup drops act_mlp and the TP
+    # activation all-reduce disappears in favor of small weight gathers)
+    h = env.constrain(h, "act_batch", "act_seq", "act_mlp")
+    h = mlp_activate(activation, h, g)
+    out = h @ params["w_out"]
+    return env.constrain(out, "act_batch", "act_seq", "act_embed")
+
+
+# -------------------------------------------------------------- Embedding
+def embed_init(key, vocab: int, d_model: int, dtype):
+    p = {"table": nd_init(key, (vocab, d_model), d_model, dtype)}
+    return p, {"table": ("p_vocab", "p_embed")}
+
+
+def embed_lookup(env, params, tokens, scale: bool):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(params["table"].shape[1]), x.dtype)
+    return env.constrain(x, "act_batch", "act_seq", "act_embed")
+
+
+def unembed(env, params_embed, x, tie: bool, head=None, cap: float = 0.0):
+    table = params_embed["table"] if tie else head["w"]
+    logits = x @ (table.T if tie else table)
+    logits = softcap(logits, cap)
+    return env.constrain(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype):
+    return ({"w": nd_init(key, (d_model, vocab), d_model, dtype)},
+            {"w": ("p_embed", "p_vocab")})
+
+
+# ------------------------------------------------------- depthwise conv1d
+def conv1d_init(key, width: int, channels: int, dtype):
+    p = {"w": nd_init(key, (width, channels), width, dtype),
+         "b": jnp.zeros((channels,), dtype)}
+    return p, {"w": ("p_none", "p_inner"), "b": ("p_inner",)}
+
+
+def conv1d_apply(params, x):
+    """Causal depthwise conv over (B, S, C); width from params."""
+    width = params["w"].shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(width):
+        shifted = x if j == 0 else jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * params["w"][width - 1 - j].astype(jnp.float32)
+    return (out + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(params, x_t, state):
+    """One decode step. x_t: (B, C); state: (B, width-1, C) past inputs."""
+    width = params["w"].shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     params["w"].astype(jnp.float32)) + params["b"].astype(jnp.float32)
+    return out.astype(x_t.dtype), window[:, 1:]

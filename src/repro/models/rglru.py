@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: x -> [branch A: linear -> GeLU] * [branch B: linear -> causal conv ->
+RG-LRU] -> out projection. The RG-LRU uses per-channel (diagonal) gates —
+a documented simplification of Griffin's block-diagonal gate matrices (see
+DESIGN.md §2.4; parameter count matches ModelConfig.param_count):
+
+    r_t = sigmoid(w_r * u_t + b_r)          (recurrence gate)
+    i_t = sigmoid(w_i * u_t + b_i)          (input gate)
+    a_t = exp(-c * softplus(lam) * r_t)     (per-channel decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The sequence recurrence is computed as a chunked linear scan: an
+associative_scan inside fixed-size chunks (log-depth, VPU-friendly) with a
+lax.scan carrying state across chunks — O(S) work, O(S/C) sequential steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import conv1d_apply, conv1d_init, conv1d_step, nd_init
+
+RGLRU_C = 8.0
+
+
+def rglru_init(cfg, key, dtype):
+    d = cfg.d_model
+    rw = cfg.rglru_width or d
+    ks = jax.random.split(key, 8)
+    conv_p, conv_s = conv1d_init(ks[3], cfg.conv_width, rw, dtype)
+    p = {
+        "w_a": nd_init(ks[0], (d, rw), d, dtype),       # branch A (gate)
+        "w_b": nd_init(ks[1], (d, rw), d, dtype),       # branch B (recurrent)
+        "w_out": nd_init(ks[2], (rw, d), rw, dtype),
+        "conv": conv_p,
+        "w_r": jnp.zeros((rw,), jnp.float32),
+        "b_r": jnp.zeros((rw,), jnp.float32),
+        "w_i": jnp.zeros((rw,), jnp.float32),
+        "b_i": jnp.zeros((rw,), jnp.float32),
+        # init lambda so decay a ~ U[0.9, 0.999]-ish (griffin init)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, rw, dtype=jnp.float32)) / RGLRU_C)),
+    }
+    s = {
+        "w_a": ("p_embed", "p_inner"), "w_b": ("p_embed", "p_inner"),
+        "w_out": ("p_inner", "p_embed"), "conv": conv_s,
+        "w_r": ("p_inner",), "b_r": ("p_inner",),
+        "w_i": ("p_inner",), "b_i": ("p_inner",), "lam": ("p_inner",),
+    }
+    return p, s
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["w_r"] * uf + params["b_r"])
+    i = jax.nn.sigmoid(params["w_i"] * uf + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def _linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t h_{t-1} + b_t over axis 1. a,b: (B, S, W) fp32."""
+    bsz, s, w = a.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    a_c = a.reshape(bsz, nc, c, w).swapaxes(0, 1)
+    b_c = b.reshape(bsz, nc, c, w).swapaxes(0, 1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, ab):
+        ac, bc = ab
+        cum_a, cum_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = cum_a * h[:, None, :] + cum_b
+        return h_all[:, -1], h_all
+
+    h_last, h_seq = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_seq = h_seq.swapaxes(0, 1).reshape(bsz, s, w)
+    return h_seq, h_last
+
+
+def rglru_forward(env, cfg, params, x, *, chunk: int = 256, h0=None,
+                  conv_state=None, return_state: bool = False):
+    """x: (B, S, d). Returns (out, (h_last, conv_state)) if return_state."""
+    bsz, s, _ = x.shape
+    rw = params["w_out"].shape[0]
+    ga = jax.nn.gelu(x @ params["w_a"], approximate=True)
+    u = x @ params["w_b"]
+    u = env.constrain(u, "act_batch", "act_seq", "act_mlp")
+    if conv_state is not None:
+        u_hist = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        u_conv = conv1d_apply(params["conv"], u_hist)[:, conv_state.shape[1]:]
+        new_conv = u_hist[:, -(cfg.conv_width - 1):]
+    else:
+        u_conv = conv1d_apply(params["conv"], u)
+        new_conv = u[:, -(cfg.conv_width - 1):]
+    a, b = _gates(params, u_conv)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, rw), jnp.float32)
+    h_seq, h_last = _linear_scan(a, b, h0, chunk)
+    out = (ga.astype(jnp.float32) * h_seq).astype(x.dtype) @ params["w_out"]
+    out = env.constrain(out, "act_batch", "act_seq", "act_embed")
+    if return_state:
+        return out, (h_last, new_conv.astype(jnp.float32))
+    return out
+
+
+def rglru_step(env, cfg, params, x_t, state):
+    """One decode step. x_t: (B, 1, d); state = (h, conv_state)."""
+    h, conv_state = state
+    ga = jax.nn.gelu(x_t[:, 0] @ params["w_a"], approximate=True)
+    u = x_t[:, 0] @ params["w_b"]
+    u_conv, new_conv = conv1d_step(params["conv"], u, conv_state.astype(u.dtype))
+    a, b = _gates(params, u_conv)
+    h_new = a * h + b
+    out = (ga.astype(jnp.float32) * h_new).astype(x_t.dtype) @ params["w_out"]
+    return out[:, None, :], (h_new, new_conv.astype(jnp.float32))

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    DECODE_RULES,
+    LONG_DECODE_RULES,
+    ShardEnv,
+    make_env,
+    local_env,
+)

@@ -1,0 +1,85 @@
+"""Cross-pod gradient compression with error feedback (pjit-native).
+
+On a multi-pod mesh the ``pod`` axis rides the slowest links, so the
+per-step gradient exchange across pods dominates the collective term. We
+compress that hop only:
+
+  1. the batch is split ``(npod, B/npod, ...)`` and per-pod gradients are
+     taken with ``vmap(grad)`` — intra-pod reduction (data/model axes)
+     stays full precision, handled by GSPMD;
+  2. each pod quantizes its gradient shard to **int8 + per-tensor fp32
+     scale** (plus the error-feedback residual from the previous step);
+  3. an ``optimization_barrier`` pins the quantization *before* the
+     resharding constraint, so GSPMD's all-gather over ``pod`` carries s8
+     on the wire (verified in the compiled HLO: ``all-gather(s8[...])``);
+  4. pods dequantize and average; the quantization residual is carried in
+     an error-feedback accumulator (EF-SGD, Seide et al.) so compression
+     is unbiased over time.
+
+Bytes on the pod hop: 1 byte/param instead of 4 — a 4x reduction of the
+inter-pod collective term.
+
+NOTE an earlier implementation used a partial-manual ``shard_map`` over
+``pod``; that path crashes XLA CPU 0.8.x natively during SPMD partitioning
+and was replaced by this constraint-driven formulation, which compiles and
+*runs* on every mesh we test.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def quantize_int8(x, axes=None) -> Tuple[jax.Array, jax.Array]:
+    if axes is None:
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    else:
+        scale = jnp.max(jnp.abs(x), axis=axes, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def pod_mean_compressed(grads_p, err, mesh, shardings=None):
+    """Mean per-pod gradients over ``pod`` in int8 with error feedback.
+
+    grads_p/err: pytrees whose leaves carry a leading ``npod`` dim sharded
+    over the ``pod`` mesh axis. ``shardings`` (optional, same tree shape):
+    the pod-stacked shardings to preserve on dims 1.. — without them the
+    constraints would replicate the intra-pod grad shards and blow up the
+    exchange. Returns (mean_grads, new_err)."""
+    def one(g, e, sh):
+        pod_sh = sh if sh is not None else NamedSharding(mesh, P("pod"))
+        spec = pod_sh.spec
+        rep_spec = P(*((None,) + tuple(spec)[1:]))
+        rep_sh = NamedSharding(mesh, rep_spec)
+        g = jax.lax.with_sharding_constraint(
+            g.astype(jnp.float32), pod_sh) + e
+        axes = tuple(range(1, g.ndim))
+        q, scale = quantize_int8(g, axes=axes)
+        q = jax.lax.with_sharding_constraint(q, pod_sh)
+        q, scale = jax.lax.optimization_barrier((q, scale))
+        new_e = g - dequantize_int8(q, scale)
+        q_rep = jax.lax.with_sharding_constraint(q, rep_sh)
+        s_rep = jax.lax.with_sharding_constraint(
+            scale, NamedSharding(mesh, P(None)))
+        mean = jnp.mean(dequantize_int8(q_rep, s_rep), axis=0)
+        return mean, new_e
+
+    flat_g, td = jax.tree.flatten(grads_p)
+    flat_e = td.flatten_up_to(err)
+    flat_sh = (td.flatten_up_to(shardings) if shardings is not None
+               else [None] * len(flat_g))
+    out = [one(g, e, s) for g, e, s in zip(flat_g, flat_e, flat_sh)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def init_error_feedback(params, npod: int = 1):
+    return jax.tree.map(
+        lambda p: jnp.zeros((npod,) + p.shape, jnp.float32), params)

@@ -1,0 +1,3 @@
+from repro.serving.pages import PagePool, PoolConfig  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Request, ServeConfig, ServeEngine, ServeStats, synth_requests)

@@ -1,0 +1,4 @@
+from repro.train.optim import (  # noqa: F401
+    adamw_init, adamw_update, adafactor_init, adafactor_update,
+    make_optimizer, opt_specs, lr_schedule, global_norm, clip_by_global_norm)
+from repro.train.train_step import make_train_step, make_serve_steps  # noqa: F401

@@ -1,0 +1,112 @@
+"""Synthetic-but-deterministic data pipeline.
+
+Generates reproducible token streams (seeded, host-shardable) with enough
+structure for loss to fall (Zipf unigrams + a Markov bigram mixture), plus
+the frontend stand-ins (patch/frame embeddings) for the VLM/audio archs.
+Batches come out already sharded per the env's ``act_batch`` rules via
+``jax.device_put`` so host->device transfer overlaps the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel.sharding import ShardEnv
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seed: int = 0
+    zipf_a: float = 1.2
+    markov_mix: float = 0.5      # fraction of tokens drawn from bigram chain
+    pad_id: int = -1
+
+
+class SyntheticLM:
+    """Deterministic stream: x_t ~ mix(Zipf unigram, bigram(x_{t-1}))."""
+
+    def __init__(self, cfg: ModelConfig, data: DataConfig = DataConfig()):
+        self.cfg = cfg
+        self.data = data
+        rng = np.random.default_rng(data.seed)
+        v = cfg.vocab_size
+        # small dense bigram table over a reduced alphabet, tiled over vocab
+        base = min(v, 512)
+        self._base = base
+        self._bigram = rng.dirichlet(np.ones(base) * 0.1, size=base)
+        self._unigram = (np.arange(1, base + 1, dtype=np.float64)
+                         ** -data.zipf_a)
+        self._unigram /= self._unigram.sum()
+
+    def sample_tokens(self, rng: np.random.Generator, batch: int,
+                      seq: int) -> np.ndarray:
+        base = self._base
+        out = np.empty((batch, seq), np.int64)
+        prev = rng.integers(0, base, size=batch)
+        for t in range(seq):
+            from_bigram = rng.random(batch) < self.data.markov_mix
+            big = np.array([rng.choice(base, p=self._bigram[p]) for p in
+                            prev[from_bigram]]) if from_bigram.any() else []
+            uni = rng.choice(base, p=self._unigram,
+                             size=int((~from_bigram).sum()))
+            nxt = np.empty(batch, np.int64)
+            nxt[from_bigram] = big
+            nxt[~from_bigram] = uni
+            out[:, t] = nxt
+            prev = nxt
+        return out % self.cfg.vocab_size
+
+    def batches(self, shape: ShapeConfig, env: Optional[ShardEnv] = None,
+                host_index: int = 0, num_hosts: int = 1
+                ) -> Iterator[Dict[str, jnp.ndarray]]:
+        """Infinite iterator of train batches (tokens + shifted targets)."""
+        cfg = self.cfg
+        b = shape.global_batch // num_hosts
+        step = 0
+        while True:
+            rng = np.random.default_rng(
+                (self.data.seed, host_index, step))
+            if cfg.is_encoder_decoder:
+                tgt = max(shape.seq_len // 4, 8)
+                toks = self.sample_tokens(rng, b, tgt + 1)
+                batch = {
+                    "src_embeds": rng.standard_normal(
+                        (b, shape.seq_len, cfg.d_model)).astype(np.float32)
+                    * 0.02,
+                    "tokens": toks[:, :-1],
+                    "targets": toks[:, 1:],
+                }
+            elif cfg.frontend == "vision":
+                text = shape.seq_len - cfg.frontend_len
+                toks = self.sample_tokens(rng, b, text + 1)
+                batch = {
+                    "patch_embeds": rng.standard_normal(
+                        (b, cfg.frontend_len, cfg.d_model)).astype(np.float32)
+                    * 0.02,
+                    "tokens": toks[:, :-1],
+                    "targets": toks[:, 1:],
+                }
+            else:
+                toks = self.sample_tokens(rng, b, shape.seq_len + 1)
+                batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+            out = {}
+            for k, x in batch.items():
+                if x.dtype == np.int64:
+                    x = x.astype(np.int32)
+                elif x.dtype == np.float32 and k != "targets":
+                    x = x.astype(np.float32)
+                arr = jnp.asarray(x if k in ("tokens", "targets")
+                                  else x.astype(jnp.bfloat16)
+                                  if k != "targets" else x)
+                if env is not None and env.mesh.size > 1:
+                    spec = ("act_batch",) + (None,) * (arr.ndim - 1)
+                    arr = jax.device_put(arr, env.sharding(
+                        *spec, shape=arr.shape))
+                out[k] = arr
+            yield out
+            step += 1

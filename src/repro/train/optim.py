@@ -1,0 +1,149 @@
+"""Optimizers built from scratch (no optax dependency): AdamW and Adafactor.
+
+AdamW keeps fp32 ``m``/``v`` (3x param bytes of state) — used for every arch
+that fits. Adafactor keeps factored second moments (row/col fp32 vectors —
+~0 extra bytes) and no momentum — required for arctic-480b, whose Adam state
+alone (5.8 TB) exceeds a 512-chip v5e pod-pair (see configs/arctic_480b.py).
+
+Optimizer-state sharding specs are derived mechanically from the parameter
+specs (``opt_specs``) so the dry-run can shard state without tracing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- schedule
+def lr_schedule(step, *, base_lr: float, warmup: int, total: int = 100_000):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (0.1 + 0.9 * cos)
+
+
+# -------------------------------------------------------------------- norms
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), norm
+
+
+# -------------------------------------------------------------------- AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return m, v, (-lr * u).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    updates = treedef.unflatten([o[2] for o in out])
+    return updates, {"m": new_m, "v": new_v, "count": count}
+
+
+# ---------------------------------------------------------------- Adafactor
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init_v(p):
+        if _factored(p.shape):
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init_v, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, eps=1e-30,
+                     weight_decay=0.0, clip_threshold=1.0, **_):
+    count = state["count"] + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            r = beta2 * v["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            c = beta2 * v["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+            vhat = (r / denom)[..., None] * c[..., None, :]
+            new_v = {"r": r, "c": c}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": vhat}
+        u = g * jax.lax.rsqrt(vhat + eps)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return new_v, (-lr * u).astype(p.dtype)
+
+    is_v_leaf = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_v = treedef.flatten_up_to(
+        jax.tree.map(lambda x: x, state["v"], is_leaf=is_v_leaf))
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_v = treedef.unflatten([o[0] for o in out])
+    updates = treedef.unflatten([o[1] for o in out])
+    return updates, {"v": new_v, "count": count}
+
+
+# ------------------------------------------------------------------ factory
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)
+
+
+def opt_specs(name: str, p_specs):
+    """Optimizer-state logical specs derived from parameter specs."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    if name == "adamw":
+        return {"m": p_specs, "v": p_specs, "count": ()}
+    if name == "adafactor":
+        def v_spec(sp):
+            if len(sp) >= 2:
+                return {"r": sp[:-1], "c": sp[:-2] + sp[-1:]}
+            return {"v": sp}
+        return {"v": jax.tree.map(v_spec, p_specs, is_leaf=is_spec),
+                "count": ()}
+    raise ValueError(name)

@@ -1,0 +1,169 @@
+"""Jittable train / serve steps with full sharding metadata.
+
+``make_train_step`` builds (step_fn, state_specs, batch_specs) for pjit:
+grad accumulation (scan over microbatches), global-norm clipping, LR
+schedule, AdamW/Adafactor, and optional int8 cross-pod gradient compression
+(shard_map manual over ``pod``, auto over data/model, with error feedback).
+
+``make_serve_steps`` builds (prefill_fn, decode_fn) for the serving shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.parallel import compression as C
+from repro.parallel.sharding import ShardEnv
+from repro.train import optim as O
+
+
+# ------------------------------------------------------------------- specs
+def batch_logical_specs(cfg: ModelConfig, mode: str) -> Dict[str, Any]:
+    if mode == "train":
+        sp: Dict[str, Any] = {"tokens": ("act_batch", None),
+                              "targets": ("act_batch", None)}
+        if cfg.frontend == "vision":
+            sp["patch_embeds"] = ("act_batch", None, None)
+        if cfg.is_encoder_decoder:
+            sp["src_embeds"] = ("act_batch", None, None)
+        return sp
+    if mode == "prefill":
+        sp = {"tokens": ("act_batch", None)}
+        if cfg.frontend == "vision":
+            sp["patch_embeds"] = ("act_batch", None, None)
+        if cfg.is_encoder_decoder:
+            sp["src_embeds"] = ("act_batch", None, None)
+        return sp
+    # decode
+    return {"token": ("act_batch", None), "pos": ("act_batch",),
+            "cache": M.cache_specs(cfg)}
+
+
+def state_logical_specs(cfg: ModelConfig, run: RunConfig):
+    p_specs = M.param_specs(cfg)
+    o_specs = O.opt_specs(cfg.optimizer, p_specs)
+    state = {"params": p_specs, "opt": o_specs,
+             "step": ()}
+    if run.gradient_compression:
+        from repro.parallel.sharding import is_spec_leaf
+        state["err"] = jax.tree.map(lambda sp: ("pod_stack",) + sp,
+                                    p_specs, is_leaf=is_spec_leaf)
+    return state
+
+
+# -------------------------------------------------------------- train step
+def make_train_step(cfg: ModelConfig, run: RunConfig, env: ShardEnv):
+    opt_init, opt_update = O.make_optimizer(cfg.optimizer)
+    use_pod_compress = (run.gradient_compression == "int8"
+                        and "pod" in env.mesh.axis_names
+                        and env.mesh.shape["pod"] > 1)
+
+    # inside the pod-manual shard_map, constraints may not name 'pod'
+    env_inner = env.without_axes("pod") if use_pod_compress else env
+
+    def loss_of(params, batch):
+        return M.loss_fn(env_inner, cfg, params, batch, run)
+
+    def grads_of(params, batch):
+        if run.grad_accum <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+
+        n = run.grad_accum
+
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), b)
+
+        def acc_step(carry, mb):
+            loss_a, g_a = carry
+            loss, g = jax.value_and_grad(loss_of)(params, mb)
+            return (loss_a + loss / n,
+                    jax.tree.map(lambda a, b: a + b / n, g_a, g)), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc_step, (0.0, zero_g), micro(batch))
+        return loss, grads
+
+    npod = (env.mesh.shape["pod"]
+            if "pod" in env.mesh.axis_names else 1)
+
+    def train_step(state, batch):
+        params = state["params"]
+        step = state["step"]
+        if use_pod_compress:
+            # per-pod grads via vmap over a (npod, B/npod, ...) batch split;
+            # int8 exchange + error feedback over the pod axis only (see
+            # parallel/compression.py)
+            def pod_split(x):
+                x = x.reshape((npod, x.shape[0] // npod) + x.shape[1:])
+                return jax.lax.with_sharding_constraint(
+                    x, env.sharding(*("pod_stack", "act_batch")
+                                    + (None,) * (x.ndim - 2),
+                                    shape=x.shape))
+            batch_p = jax.tree.map(pod_split, batch)
+            losses, grads_p = jax.vmap(
+                jax.value_and_grad(loss_of), in_axes=(None, 0))(
+                    params, batch_p)
+            loss = jnp.mean(losses)
+            # preserve intra-pod grad sharding through the int8 exchange
+            from repro.parallel.sharding import is_spec_leaf, tree_shardings
+            err_specs = jax.tree.map(lambda sp: ("pod_stack",) + sp,
+                                     M.param_specs(cfg), is_leaf=is_spec_leaf)
+            err_sh = tree_shardings(env, err_specs, state["err"])
+            grads, new_err = C.pod_mean_compressed(
+                grads_p, state["err"], env.mesh, shardings=err_sh)
+        else:
+            loss, grads = grads_of(params, batch)
+            new_err = state.get("err")
+
+        grads, gnorm = O.clip_by_global_norm(grads, run.max_grad_norm)
+        lr = O.lr_schedule(step, base_lr=run.learning_rate,
+                           warmup=run.warmup_steps)
+        updates, new_opt = opt_update(
+            grads, state["opt"], params, lr=lr, b1=run.adam_b1,
+            b2=run.adam_b2, weight_decay=run.weight_decay)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                          ).astype(p.dtype), params, updates)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        if "err" in state:
+            new_state["err"] = new_err
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, key, npod: int = 1):
+    params = M.init_params(cfg, key, run)
+    opt_init, _ = O.make_optimizer(cfg.optimizer)
+    state = {"params": params, "opt": opt_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if run.gradient_compression:
+        state["err"] = C.init_error_feedback(params, npod)
+    return state
+
+
+def train_state_struct(cfg: ModelConfig, run: RunConfig, npod: int = 1):
+    """abstract state (ShapeDtypeStructs) without allocating."""
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, run, npod=npod),
+        jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------------- serve steps
+def make_serve_steps(cfg: ModelConfig, run: RunConfig, env: ShardEnv):
+    def prefill_fn(params, batch):
+        return M.prefill(env, cfg, params, batch, run)
+
+    def decode_fn(params, token, pos, cache):
+        return M.decode_step(env, cfg, params, token, pos, cache, run)
+
+    return prefill_fn, decode_fn

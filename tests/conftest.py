@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py forces the 512 placeholder devices (in its own
+process)."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def env():
+    from repro.parallel.sharding import local_env
+    return local_env()
+
+
+@pytest.fixture(scope="session")
+def run32():
+    from repro.configs.base import RunConfig
+    return RunConfig(remat_policy="none", param_dtype="float32")

@@ -1,0 +1,103 @@
+"""Attention: chunked online-softmax vs full softmax, masks, decode paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import RunConfig
+from repro.models import attention as A
+from repro.models import model as M
+from repro.parallel.sharding import local_env
+
+ENV = local_env()
+CFG = dataclasses.replace(reduced_config("gemma2-2b"), query_scale=0.0)
+
+
+def _qkv(key, b=2, s=64, hq=4, hkv=2, d=32):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, s, hq, d)),
+            jax.random.normal(ks[1], (b, s, hkv, d)),
+            jax.random.normal(ks[2], (b, s, hkv, d)))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("mask", ["causal", "local", "full"])
+def test_chunked_matches_full(chunk, mask):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    cfg = dataclasses.replace(CFG, local_window=16)
+    full = A.attention_core(ENV, cfg, q, k, v, mask_kind=mask, chunk=64)
+    ch = A.attention_core(ENV, cfg, q, k, v, mask_kind=mask, chunk=chunk)
+    np.testing.assert_allclose(full, ch, atol=2e-5)
+
+
+def test_softcap_changes_output():
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    c0 = dataclasses.replace(CFG, attn_logit_softcap=0.0)
+    c1 = dataclasses.replace(CFG, attn_logit_softcap=1.0)
+    o0 = A.attention_core(ENV, c0, q, k, v, mask_kind="causal")
+    o1 = A.attention_core(ENV, c1, q, k, v, mask_kind="causal")
+    assert float(jnp.max(jnp.abs(o0 - o1))) > 1e-4
+
+
+def test_prefix_mask_sees_future_prefix():
+    """prefix tokens attend bidirectionally: token0 must differ vs causal."""
+    q, k, v = _qkv(jax.random.PRNGKey(2))
+    causal = A.attention_core(ENV, CFG, q, k, v, mask_kind="causal")
+    prefix = A.attention_core(ENV, CFG, q, k, v, mask_kind="prefix",
+                              prefix_len=8)
+    assert float(jnp.max(jnp.abs(causal[:, 0] - prefix[:, 0]))) > 1e-5
+    # suffix stays causal w.r.t. other suffix tokens + sees whole prefix
+    np.testing.assert_allclose(causal[:, -1], prefix[:, -1], atol=1e-5)
+
+
+def test_ring_cache_equivalent_to_full_for_local():
+    """Local attention via ring buffer == local attention via full cache."""
+    b, s, hkv, d, w = 1, 24, 2, 16, 8
+    key = jax.random.PRNGKey(3)
+    k = jax.random.normal(key, (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(4), (b, s, hkv, d))
+    ring_k = jnp.zeros((b, w, hkv, d))
+    ring_v = jnp.zeros_like(ring_k)
+    ring_k, ring_v = A.write_ring_cache(ring_k, ring_v, k, v)
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, 1, 4, d))
+    pos = jnp.array([s - 1])
+    cfg = dataclasses.replace(CFG, attn_logit_softcap=0.0)
+    o_ring = A.decode_attend(ENV, cfg, q, ring_k, ring_v, pos, ring=True,
+                             window=w)
+    full_k = jnp.zeros((b, s, hkv, d)).at[:, :s].set(k)
+    o_full = A.decode_attend(ENV, cfg, q, full_k, v, pos, ring=False,
+                             window=w)
+    np.testing.assert_allclose(o_ring, o_full, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["gemma2-2b", "recurrentgemma-9b",
+                                  "mamba2-2.7b", "seamless-m4t-medium",
+                                  "paligemma-3b"])
+def test_prefill_decode_consistency_fp32(name):
+    """prefill+decode == full forward at fp32 (cache kept fp32)."""
+    cfg = reduced_config(name)
+    run = RunConfig(remat_policy="none", param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key, run)
+    B, S = 2, 20
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["src_embeds"] = 0.02 * jax.random.normal(
+            key, (B, 16, cfg.d_model), jnp.float32)
+    total = S + (cfg.frontend_len if cfg.frontend == "vision" else 0)
+    _, cache, pos = M.prefill(ENV, cfg, params, batch, run,
+                              max_len=total + 4, kv_dtype=jnp.float32)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                             cfg.vocab_size)
+    logits_d, _ = M.decode_step(ENV, cfg, params, nxt, pos + 1, cache, run)
+    batch2 = dict(batch, tokens=jnp.concatenate([tokens, nxt], 1))
+    x2 = M.forward_train(ENV, cfg, params, batch2, run)
+    full = M._logits(ENV, cfg, params, x2[:, -1:])[:, 0]
+    np.testing.assert_allclose(logits_d, full, atol=2e-2)

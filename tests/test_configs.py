@@ -1,0 +1,84 @@
+"""Per-arch configs: registry integrity, analytic param counts vs published
+sizes, and the required reduced-config smoke test (one forward/train step on
+CPU, output shapes + no NaNs) for every assigned architecture."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, REGISTRY, get_config, reduced_config
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.shapes import ALL_SHAPES, shapes_for, skipped_shapes_for
+from repro.models import model as M
+from repro.parallel.sharding import local_env
+
+# published sizes (B params); tolerance covers assignment-vs-release dims
+PUBLISHED = {
+    "gemma2-2b": 2.6, "nemotron-4-15b": 15.0, "qwen3-4b": 4.0,
+    "command-r-35b": 32.0, "recurrentgemma-9b": 8.5, "arctic-480b": 480.0,
+    "granite-moe-3b-a800m": 3.3, "paligemma-3b": 2.5, "mamba2-2.7b": 2.7,
+    "seamless-m4t-medium": 0.6,
+}
+
+
+def test_registry_complete():
+    assert len(ARCH_NAMES) == 10
+    assert set(PUBLISHED) == set(ARCH_NAMES)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_matches_published(name):
+    got = get_config(name).param_count() / 1e9
+    want = PUBLISHED[name]
+    assert got == pytest.approx(want, rel=0.2), f"{name}: {got}B vs {want}B"
+
+
+def test_active_params_moe():
+    arctic = get_config("arctic-480b")
+    assert arctic.active_param_count() < 0.05 * arctic.param_count()
+    granite = get_config("granite-moe-3b-a800m")
+    assert granite.active_param_count() == pytest.approx(0.88e9, rel=0.25)
+
+
+def test_shape_suite():
+    assert len(ALL_SHAPES) == 4
+    total_cells = sum(len(shapes_for(get_config(a))) for a in ARCH_NAMES)
+    skipped = sum(len(skipped_shapes_for(get_config(a))) for a in ARCH_NAMES)
+    assert total_cells + skipped == 40         # the assigned 40-cell grid
+    # long_500k runs only for sub-quadratic archs
+    for a in ("gemma2-2b", "recurrentgemma-9b", "mamba2-2.7b"):
+        assert "long_500k" in [s.name for s in shapes_for(get_config(a))]
+    for a in ("nemotron-4-15b", "command-r-35b", "arctic-480b"):
+        assert "long_500k" in skipped_shapes_for(get_config(a))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_smoke_forward_and_train_step(name):
+    """REQUIRED smoke: reduced same-family config, one forward + train step,
+    asserting output shapes and no NaNs."""
+    cfg = reduced_config(name)
+    run = RunConfig(remat_policy="none", learning_rate=1e-3,
+                    param_dtype="float32")
+    env = local_env()
+    shape = ShapeConfig(name="smoke", seq_len=32, global_batch=2,
+                        mode="train")
+    specs = M.input_specs(cfg, shape, run)
+    key = jax.random.PRNGKey(0)
+    batch = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(key, v.shape, 0, cfg.vocab_size)
+        else:
+            batch[k] = 0.02 * jax.random.normal(key, v.shape, jnp.float32)
+    params = M.init_params(cfg, key, run)
+    x = M.forward_train(env, cfg, params, batch, run)
+    expect_seq = (batch["tokens"].shape[1] +
+                  (cfg.frontend_len if cfg.frontend == "vision" else 0))
+    assert x.shape == (2, expect_seq, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(x)))
+
+    from repro.train import train_step as TS
+    step = TS.make_train_step(cfg, run, env)
+    state = TS.init_train_state(cfg, run, key)
+    state, metrics = jax.jit(step)(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])

@@ -1,0 +1,163 @@
+"""CIAO core: VTA, interference list saturation, Algorithm 1 invariants,
+on-chip memory structural properties (hypothesis where it pays)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interference import DetectorConfig, InterferenceDetector, NO_WARP
+from repro.core.onchip import LINE, AddressTranslationUnit, OnChipConfig, \
+    OnChipMemory, SMMT
+from repro.core.policies import CIAOPolicy
+from repro.core.vta import VictimTagArray
+
+
+# ------------------------------------------------------------------- VTA
+def test_vta_basic_hit_and_pop():
+    vta = VictimTagArray()
+    vta.insert(owner_wid=3, line_addr=100, evictor_wid=7)
+    assert vta.probe(3, 100) == 7
+    assert vta.probe(3, 100) is None          # popped on hit
+    assert vta.hit_count(3) == 1
+
+
+def test_vta_fifo_capacity():
+    vta = VictimTagArray(tags_per_set=4)
+    for i in range(6):
+        vta.insert(0, i, 1)
+    assert vta.probe(0, 0) is None            # pushed out by FIFO
+    assert vta.probe(0, 5) == 1
+
+
+def test_vta_ignores_self_eviction():
+    vta = VictimTagArray()
+    vta.insert(2, 55, 2)
+    assert vta.probe(2, 55) is None
+
+
+# --------------------------------------------------- interference list
+def test_sat_counter_keeps_frequent_interferer():
+    """Fig. 4c: the frequent interferer survives occasional others."""
+    det = InterferenceDetector(DetectorConfig())
+    for _ in range(5):
+        det.on_eviction(4, 10, 32)            # W32 interferes with W4
+        assert det.on_miss(4, 10) == 32
+    det.on_eviction(4, 11, 42)                # one-off W42 event
+    det.on_miss(4, 11)
+    assert det.most_interfering(4) == 32      # counter only decremented
+
+
+def test_sat_counter_replaces_on_underflow():
+    det = InterferenceDetector(DetectorConfig())
+    det.on_eviction(4, 10, 32)
+    det.on_miss(4, 10)                        # counter = 0, wid 32
+    det.on_eviction(4, 11, 42)
+    det.on_miss(4, 11)                        # different -> replace at 0
+    assert det.most_interfering(4) == 42
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_sat_counter_bounds(evictors):
+    det = InterferenceDetector(DetectorConfig())
+    for i, e in enumerate(evictors):
+        det.on_eviction(7, 100 + i, 10 + e)
+        det.on_miss(7, 100 + i)
+    i = 7 % det.cfg.list_entries
+    assert 0 <= det.sat_counter[i] <= det.cfg.sat_max
+    assert det.most_interfering(7) in {10 + e for e in evictors}
+
+
+# ------------------------------------------------------------ Algorithm 1
+def _detector_with_interference(interfered=0, interferer=1, hits=50):
+    det = InterferenceDetector(DetectorConfig(high_epoch=100, low_epoch=10))
+    for i in range(hits):
+        det.on_eviction(interfered, i, interferer)
+        det.on_miss(interfered, i)
+    det.on_instruction(100)
+    return det
+
+
+def test_algorithm1_isolate_then_stall():
+    det = _detector_with_interference()
+    pol = CIAOPolicy(8, det, mode="c")
+    done = [False] * 8
+    det.poll_epochs(8)
+    pol.high_epoch_tick(list(range(8)), done)
+    assert pol.flags[1].i == 1 and pol.flags[1].v == 1    # isolated first
+    assert det.isolation_trigger(1) == 0
+    # still interfering -> next high tick stalls it
+    for i in range(50, 100):
+        det.on_eviction(0, i, 1)
+        det.on_miss(0, i)
+    det.on_instruction(100)
+    det.poll_epochs(8)
+    pol.high_epoch_tick(list(range(8)), done)
+    assert pol.flags[1].v == 0                            # stalled
+    assert det.stall_trigger(1) == 0
+    assert pol.stall_stack == [1]
+
+
+def test_algorithm1_reverse_order_reactivation():
+    det = _detector_with_interference()
+    pol = CIAOPolicy(8, det, mode="t")
+    done = [False] * 8
+    pol.stall_directly(1, 0)
+    pol.stall_directly(2, 0)
+    assert pol.stall_stack == [1, 2]
+    # trigger 0 finished -> reactivate newest first (LIFO)
+    done[0] = True
+    pol.low_epoch_tick(list(range(8)), done)
+    assert pol.stall_stack == [1] and pol.flags[2].v == 1
+    pol.low_epoch_tick(list(range(8)), done)
+    assert pol.stall_stack == [] and pol.flags[1].v == 1
+
+
+def test_ciao_p_never_stalls():
+    det = _detector_with_interference()
+    pol = CIAOPolicy(8, det, mode="p")
+    det.poll_epochs(8)
+    for _ in range(10):
+        pol.high_epoch_tick(list(range(8)), [False] * 8)
+    assert all(f.v == 1 for f in pol.flags)
+    assert not pol.stall_directly(1, 0)
+
+
+# ------------------------------------------------------------- on-chip
+@given(st.integers(0, 2**25), st.integers(0, 47))
+@settings(max_examples=60, deadline=None)
+def test_atu_tag_in_opposite_bank_group(addr, wid):
+    """§IV-B invariant: tag and data block live in different bank groups,
+    so one shared-memory access serves both in parallel."""
+    atu = AddressTranslationUnit(OnChipConfig(), region_blocks=256)
+    t = atu.translate(addr * LINE, wid)
+    assert t.tag_group != t.group
+    assert 0 <= t.bank < 16 and t.group in (0, 1)
+
+
+def test_smmt_reserve_unused():
+    smmt = SMMT(48 * 1024)
+    smmt.allocate("app", 16 * 1024)
+    base, size = smmt.reserve_unused()
+    assert base == 16 * 1024 and size == 32 * 1024
+    assert smmt.unused() == 0
+    with pytest.raises(ValueError):
+        smmt.allocate("x", 1)
+
+
+def test_onchip_migration_single_copy():
+    """L1D->smem migration: the line leaves L1D when it enters smem."""
+    det = InterferenceDetector(DetectorConfig())
+    mem = OnChipMemory(OnChipConfig(), det)
+    mem.access(0, 0)                               # fills L1D
+    assert mem._l1_lookup(0)[1] is not None
+    ev = mem.access(0, 0, isolated=True)           # redirected -> migrates
+    assert ev == "smem_migrate"
+    assert mem._l1_lookup(0)[1] is None            # single-copy invariant
+    assert mem.access(0, 0, isolated=True) == "smem_hit"
+
+
+def test_onchip_smem_sized_by_smmt():
+    det = InterferenceDetector(DetectorConfig())
+    full = OnChipMemory(OnChipConfig(), det, smem_used_bytes=0)
+    half = OnChipMemory(OnChipConfig(), InterferenceDetector(DetectorConfig()),
+                        smem_used_bytes=24 * 1024)
+    assert half.region_blocks < full.region_blocks

@@ -1,0 +1,49 @@
+"""Loop-aware HLO analyzer: exact FLOP counting through scan bodies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_flops_counted_with_trip_count():
+    w = jax.ShapeDtypeStruct((13, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out.sum()
+
+    compiled = jax.jit(f).lower(w, x).compile()
+    res = H.analyze(compiled.as_text())
+    expected = 2 * 8 * 64 * 64 * 13          # one dot per iteration x 13
+    assert res["flops"] == expected
+    assert any(m >= 13 for m in res["loop_multipliers"].values())
+
+
+def test_cost_analysis_undercounts_vs_analyzer():
+    """Demonstrates why the analyzer exists: XLA's cost_analysis counts the
+    while body once."""
+    w = jax.ShapeDtypeStruct((10, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def f(w, x):
+        def body(c, wi):
+            return c @ wi, None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    compiled = jax.jit(f).lower(w, x).compile()
+    xla_flops = compiled.cost_analysis().get("flops", 0)
+    res = H.analyze(compiled.as_text())
+    assert res["flops"] >= 9 * xla_flops / 2   # ~10x undercount recovered
+
+
+def test_no_loops_matches_direct():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    res = H.analyze(compiled.as_text())
+    assert res["flops"] == 2 * 32 * 48 * 16
+    assert res["collective_total_effective"] == 0

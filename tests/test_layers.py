@@ -1,0 +1,70 @@
+"""Primitive-layer unit tests + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale():
+    p, _ = L.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 7.0
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 32))
+    pos = jnp.arange(8)
+    y = L.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = L.rope(jnp.broadcast_to(q, (1, 1, 1, 32)), jnp.array([i]), 1e4)
+        kj = L.rope(jnp.broadcast_to(k, (1, 1, 1, 32)), jnp.array([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-500, 500, 101)
+    y = L.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    np.testing.assert_allclose(L.softcap(x, 0.0), x)
+
+
+def test_conv1d_step_matches_full():
+    key = jax.random.PRNGKey(0)
+    p, _ = L.conv1d_init(key, 4, 8, jnp.float32)
+    x = jax.random.normal(key, (2, 10, 8))
+    full = L.conv1d_apply(p, x)
+    state = jnp.zeros((2, 3, 8))
+    outs = []
+    for t in range(10):
+        o, state = L.conv1d_step(p, x[:, t], state)
+        outs.append(o)
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(full, step, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "geglu", "gelu", "squared_relu"])
+def test_mlp_variants(act, env):
+    p, specs = L.mlp_init(jax.random.PRNGKey(0), 16, 32, act, jnp.float32)
+    assert ("w_gate" in p) == (act in ("swiglu", "geglu"))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16))
+    y = L.mlp_apply(env, p, x, act)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+
+
+@given(st.integers(2, 64), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_embed_roundtrip_shapes(vocab, dm):
+    p, _ = L.embed_init(jax.random.PRNGKey(0), vocab, dm * 8, jnp.float32)
+    assert p["table"].shape == (vocab, dm * 8)

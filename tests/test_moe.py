@@ -1,0 +1,51 @@
+"""MoE: shard_map dispatch vs dense oracle; capacity-drop semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import moe as MOE
+from repro.parallel.sharding import local_env
+
+ENV = local_env()
+
+
+def _setup(name, **over):
+    cfg = dataclasses.replace(reduced_config(name), **over)
+    key = jax.random.PRNGKey(0)
+    params, _ = MOE.moe_init(cfg, key, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("name", ["arctic-480b", "granite-moe-3b-a800m"])
+def test_moe_matches_dense_oracle(name):
+    """With generous capacity nothing drops: sort-based dispatch == dense."""
+    cfg, params, x = _setup(name)
+    out = MOE.moe_apply(ENV, cfg, params, x, capacity_factor=8.0)
+    ref = MOE.moe_ref(cfg, params, x)
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg, params, x = _setup("arctic-480b")
+    full = MOE.moe_apply(ENV, cfg, params, x, capacity_factor=8.0)
+    tight = MOE.moe_apply(ENV, cfg, params, x, capacity_factor=0.15)
+    # dropping changes outputs (some tokens lose expert contributions)
+    assert float(jnp.max(jnp.abs(full - tight))) > 1e-5
+    # dropped tokens produce zeros, never NaNs
+    assert bool(jnp.all(jnp.isfinite(tight)))
+
+
+def test_moe_grads_flow():
+    cfg, params, x = _setup("granite-moe-3b-a800m")
+
+    def loss(p):
+        return jnp.sum(MOE.moe_apply(ENV, cfg, p, x, capacity_factor=8.0) ** 2)
+
+    g = jax.grad(loss)(params)
+    gn = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,74 @@
+"""Serving engine: completion, pool invariants, CIAO vs GTO under pressure."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interference import DetectorConfig, InterferenceDetector
+from repro.serving import (PoolConfig, Request, ServeConfig, ServeEngine,
+                           synth_requests)
+from repro.serving.pages import PagePool
+
+
+def _run(policy, reqs=None, **pool_kw):
+    pool = PoolConfig(**{"main_pages": 640, "reserve_pages": 192,
+                         "page_tokens": 16, **pool_kw})
+    cfg = ServeConfig(policy=policy, groups=10, pool=pool)
+    reqs = reqs if reqs is not None else synth_requests(
+        256, groups=10, prefix_pages=24, decode_tokens=128,
+        heavy_frac=0.25, heavy_decode=1000)
+    return ServeEngine(cfg).run(list(reqs))
+
+
+@pytest.mark.parametrize("policy", ["gto", "ccws", "statpcal", "ciao-p",
+                                    "ciao-t", "ciao-c"])
+def test_all_requests_complete(policy):
+    st_ = _run(policy)
+    assert st_.completed == 256
+    assert st_.decoded_tokens > 0
+
+
+def test_ciao_reduces_interference_cost():
+    gto = _run("gto")
+    cc = _run("ciao-c")
+    assert gto.preemptions > 0, "workload must create pressure"
+    assert cc.preemptions <= gto.preemptions
+    assert cc.tokens_per_unit >= gto.tokens_per_unit
+
+
+def test_no_pressure_policies_equal():
+    reqs = synth_requests(40, groups=4, prefix_pages=4, decode_tokens=64,
+                          heavy_frac=0.0)
+    a = _run("gto", reqs=reqs, main_pages=2048)
+    b = _run("ciao-c", reqs=reqs, main_pages=2048)
+    assert a.preemptions == b.preemptions == 0
+    assert a.work_units == b.work_units
+
+
+# ------------------------------------------------------------ pool props
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 3),
+                          st.booleans()), min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_pool_invariants(ops):
+    det = InterferenceDetector(DetectorConfig(num_warps=8))
+    pool = PagePool(PoolConfig(main_pages=8, reserve_pages=4), det)
+    pinned = {}
+    for key_i, slot, iso in ops:
+        r = pool.acquire((0, key_i), slot, slot, isolated=iso)
+        if r != "defer":
+            pinned[(0, key_i)] = slot
+        # capacity never exceeded
+        assert pool.counts["main"] <= 8
+        assert pool.counts["reserve"] <= 4
+        # bookkeeping consistent
+        assert pool.counts["main"] + pool.counts["reserve"] == len(pool.pages)
+    for key, slot in pinned.items():
+        pool.unpin(key, slot, free=True)
+    # all pinned-by-us pages released or cached; counters non-negative
+    assert pool.counts["main"] >= 0 and pool.counts["reserve"] >= 0
+
+
+def test_prefix_cache_reuse():
+    """Second request of a session hits the cached prefix (no re-prefill)."""
+    reqs = [Request(rid=0, group=0, prefix_pages=8, decode_tokens=16),
+            Request(rid=1, group=0, prefix_pages=8, decode_tokens=16)]
+    st_ = _run("gto", reqs=reqs, main_pages=256)
+    assert st_.prefill_pages == 8        # prefix prefilled exactly once

@@ -1,0 +1,55 @@
+"""SM simulator: determinism + the paper's class-level ordering phenomena
+(scaled-down traces so the suite stays fast)."""
+import pytest
+
+from repro.core import make_workload
+from repro.core.simulator import SMSimulator, SimConfig, run_policy_sweep
+
+
+@pytest.fixture(scope="module")
+def sws_results():
+    wl = make_workload("syrk", scale=0.5)
+    return run_policy_sweep(wl, ["gto", "ccws", "ciao-p", "ciao-c"])
+
+
+def test_deterministic():
+    wl = make_workload("syrk", scale=0.25)
+    a = SMSimulator(wl, "ciao-c").run()
+    b = SMSimulator(wl, "ciao-c").run()
+    assert a.ipc == b.ipc and a.stats == b.stats
+
+
+def test_sws_isolation_wins(sws_results):
+    """CIAO-P must beat GTO on small-working-set thrash (paper Fig. 8b/10)."""
+    r = sws_results
+    assert r["ciao-p"].ipc > 1.3 * r["gto"].ipc
+    assert r["ciao-p"].l1_hit_rate > r["gto"].l1_hit_rate + 0.3
+
+
+def test_ciao_keeps_tlp_vs_ccws(sws_results):
+    """CIAO throttles fewer warps than CCWS-style locality protection."""
+    r = sws_results
+    assert r["ciao-p"].mean_active_warps >= r["ccws"].mean_active_warps - 1
+
+
+def test_ci_class_no_throttle():
+    wl = make_workload("conv2d", scale=0.5)
+    res = run_policy_sweep(wl, ["gto", "ciao-c"])
+    # compute-intensive: CIAO must not sacrifice TLP (paper Fig. 1/9)
+    assert res["ciao-c"].ipc >= 0.95 * res["gto"].ipc
+    assert res["ciao-c"].mean_active_warps > 40
+
+
+def test_smem_usage_caps_isolation():
+    """F_smem > 0 shrinks CIAO's borrowed region (Table II)."""
+    wl_free = make_workload("syrk", scale=0.25)
+    wl_used = make_workload("ss", scale=0.25)       # 50% smem used
+    s_free = SMSimulator(wl_free, "ciao-p")
+    s_used = SMSimulator(wl_used, "ciao-p")
+    assert s_used.mem.region_blocks < s_free.mem.region_blocks
+
+
+def test_best_swl_uses_profiled_limit():
+    wl = make_workload("syrk", scale=0.25)
+    res = run_policy_sweep(wl, ["best-swl"], best_swl_limits=(2, 8, 48))
+    assert res["best-swl"].ipc > 0

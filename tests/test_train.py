@@ -1,0 +1,127 @@
+"""Train substrate: optimizers, grad accumulation, loss-chunked CE,
+trainer loop with failure injection, straggler monitor."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.parallel.sharding import local_env
+from repro.train import optim as O
+from repro.train import train_step as TS
+
+ENV = local_env()
+SHAPE = ShapeConfig(name="t", seq_len=64, global_batch=4, mode="train")
+
+
+def _batch(cfg, key, b=4, s=64):
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.array([3.0, -2.0])}
+    state = O.adamw_init(w)
+    for _ in range(200):
+        g = jax.tree.map(lambda x: 2 * x, w)
+        upd, state = O.adamw_update(g, state, w, lr=0.05, weight_decay=0.0)
+        w = jax.tree.map(lambda p, u: p + u, w, upd)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 0.1
+
+
+def test_adafactor_factored_state_small():
+    params = {"big": jnp.zeros((64, 128)), "vec": jnp.zeros((32,))}
+    st = O.adafactor_init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(st["v"]))
+    assert n_state == 64 + 128 + 32          # factored, not 64*128
+    g = jax.tree.map(jnp.ones_like, params)
+    upd, st = O.adafactor_update(g, st, params, lr=0.01)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(upd))
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = O.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(O.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = reduced_config("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+    run1 = RunConfig(remat_policy="none", grad_accum=1,
+                     param_dtype="float32")
+    run2 = dataclasses.replace(run1, grad_accum=2)
+    s1 = TS.init_train_state(cfg, run1, key)
+    s2 = jax.tree.map(lambda x: x, s1)
+    n1, m1 = jax.jit(TS.make_train_step(cfg, run1, ENV))(s1, batch)
+    n2, m2 = jax.jit(TS.make_train_step(cfg, run2, ENV))(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     n1["params"], n2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-5
+
+
+def test_loss_chunking_equivalent():
+    cfg = reduced_config("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+    run_a = RunConfig(remat_policy="none", loss_chunk=0,
+                      param_dtype="float32")
+    run_b = dataclasses.replace(run_a, loss_chunk=16)
+    params = M.init_params(cfg, key, run_a)
+    la = M.loss_fn(ENV, cfg, params, batch, run_a)
+    lb = M.loss_fn(ENV, cfg, params, batch, run_b)
+    assert float(la) == pytest.approx(float(lb), rel=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["none", "dots", "full"])
+def test_remat_policies_same_loss(policy):
+    cfg = reduced_config("gemma2-2b")
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key, s=32)
+    run = RunConfig(remat_policy=policy, param_dtype="float32")
+    params = M.init_params(cfg, key, run)
+    l = M.loss_fn(ENV, cfg, params, batch, run)
+    g = jax.grad(lambda p: M.loss_fn(ENV, cfg, p, batch, run))(params)
+    assert jnp.isfinite(l)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_trainer_loss_falls_and_resumes(tmp_path):
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg = reduced_config("qwen3-4b")
+    run = RunConfig(remat_policy="none", learning_rate=3e-3,
+                    warmup_steps=10, param_dtype="float32")
+    shape = ShapeConfig(name="t", seq_len=64, global_batch=8, mode="train")
+    tc = TrainerConfig(total_steps=50, checkpoint_every=15,
+                       checkpoint_dir=str(tmp_path), log_every=10,
+                       async_checkpoint=False)
+    t = Trainer(cfg, run, ENV, shape, tc, fail_at_step=20)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        t.run_loop()
+    # restart resumes from step 15 and finishes
+    t2 = Trainer(cfg, run, ENV, shape, tc)
+    out = t2.run_loop()
+    losses = out["losses"]
+    assert len(losses) == 35                       # 50 - resumed step 15
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) + 0.5
+
+
+def test_straggler_monitor():
+    from repro.train.trainer import StragglerMonitor
+    hits = []
+    mon = StragglerMonitor(threshold=3.0,
+                           on_straggler=lambda s, dt, e: hits.append(s))
+    for i in range(10):
+        mon.observe(i, 1.0)
+    assert not mon.events
+    mon.observe(10, 10.0)
+    assert mon.events == [10] and hits == [10]
+    # outlier must not poison the EWMA
+    assert mon.ewma == pytest.approx(1.0, rel=0.01)
