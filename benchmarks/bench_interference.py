@@ -1,40 +1,33 @@
 """Fig. 4 reproduction: non-uniform interference — per-warp max/min
-interference frequencies under GTO on an irregular LWS workload."""
+interference frequencies under GTO on an irregular LWS workload.
+
+The (evictor, victim) pair counts are recorded by the interference
+detector itself and surface in each ``RunRecord``, so this is a one-cell
+``repro.core.runner`` grid plus post-processing."""
 from __future__ import annotations
 
-from collections import Counter
+from typing import Optional
 
 from benchmarks.common import emit
-from repro.core import make_workload
-from repro.core.simulator import SMSimulator
+from repro.core.runner import ExperimentGrid, run_grid
 
 
-def main():
-    wl = make_workload("kmn", scale=0.5)
-    sim = SMSimulator(wl, "gto")
-
-    pair_counts: Counter = Counter()
-    orig = sim.det.on_miss
-
-    def traced(wid, line):
-        ev = orig(wid, line)
-        if ev is not None:
-            pair_counts[(ev, wid)] += 1
-        return ev
-
-    sim.det.on_miss = traced
-    sim.run()
-    if not pair_counts:
+def main(processes: Optional[int] = None,
+         json_path: Optional[str] = None):
+    records = run_grid(ExperimentGrid(name="fig4", workloads=("kmn",),
+                                      policies=("gto",)),
+                       processes=processes, json_path=json_path)
+    pairs = records[0].pairs            # [evictor, victim, count] desc
+    if not pairs:
         emit("fig4/interference_pairs", 0.0, "none")
         return
     per_victim: dict = {}
-    for (ev, wid), c in pair_counts.items():
+    for ev, wid, c in pairs:
         per_victim.setdefault(wid, []).append(c)
     maxes = [max(v) for v in per_victim.values()]
     mins = [min(v) for v in per_victim.values()]
-    top = pair_counts.most_common(3)
-    emit("fig4/max_pair", 0.0,
-         f"{top[0][0][0]}->{top[0][0][1]}:{top[0][1]}")
+    ev, wid, c = pairs[0]
+    emit("fig4/max_pair", 0.0, f"{ev}->{wid}:{c}")
     emit("fig4/skew", 0.0,
          f"max_freq_mean={sum(maxes)/len(maxes):.1f};"
          f"min_freq_mean={sum(mins)/len(mins):.1f};"

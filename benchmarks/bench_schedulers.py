@@ -1,15 +1,17 @@
 """Fig. 8 reproduction: normalized IPC of 7 schedulers across the LWS /
-SWS / CI benchmark classes + geometric means."""
+SWS / CI benchmark classes + geometric means.
+
+The policy × workload sweep runs through ``repro.core.runner`` — one
+declarative grid, optional multiprocessing fan-out, optional JSON
+persistence — instead of a hand-rolled loop."""
 from __future__ import annotations
 
-import math
 import time
-
-import numpy as np
+from typing import Optional
 
 from benchmarks.common import emit
-from repro.core import WORKLOADS, make_workload
-from repro.core.simulator import run_policy_sweep
+from repro.core.runner import (ExperimentGrid, geomean, index_records,
+                               run_grid)
 
 POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
             "ciao-c")
@@ -18,32 +20,34 @@ BENCH_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
              "backprop", "conv2d", "gaussian", "nw")    # CI
 
 
-def main(scale: float = 0.5):
+def main(scale: float = 0.5, processes: Optional[int] = None,
+         json_path: Optional[str] = None):
+    grid = ExperimentGrid(name="fig8", workloads=BENCH_SET,
+                          policies=POLICIES, scale=scale)
+    t0 = time.perf_counter()
+    records = run_grid(grid, processes=processes, json_path=json_path)
+    us_per_cell = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+
+    by = index_records(records)
     per_class = {"LWS": {p: [] for p in POLICIES},
                  "SWS": {p: [] for p in POLICIES},
                  "CI": {p: [] for p in POLICIES}}
     allw = {p: [] for p in POLICIES}
     for name in BENCH_SET:
-        wl = make_workload(name, scale=scale)
-        t0 = time.perf_counter()
-        res = run_policy_sweep(wl, POLICIES)
-        dt = (time.perf_counter() - t0) * 1e6
-        gto = res["gto"].ipc
+        gto = by[name, "gto", "base"].ipc
         for p in POLICIES:
-            rel = res[p].ipc / max(gto, 1e-12)
-            per_class[wl.klass][p].append(rel)
+            r = by[name, p, "base"]
+            rel = r.ipc / max(gto, 1e-12)
+            per_class[r.klass][p].append(rel)
             allw[p].append(rel)
-            emit(f"fig8/{name}/{p}", dt / len(POLICIES), f"{rel:.3f}")
+            emit(f"fig8/{name}/{p}", us_per_cell, f"{rel:.3f}")
     for klass, data in per_class.items():
         for p in POLICIES:
-            gm = math.exp(np.mean([math.log(max(x, 1e-9))
-                                   for x in data[p]]))
-            emit(f"fig8/geomean_{klass}/{p}", 0.0, f"{gm:.3f}")
+            emit(f"fig8/geomean_{klass}/{p}", 0.0,
+                 f"{geomean(data[p]):.3f}")
     for p in POLICIES:
-        gm = math.exp(np.mean([math.log(max(x, 1e-9)) for x in allw[p]]))
-        emit(f"fig8/geomean_all/{p}", 0.0, f"{gm:.3f}")
-    return {p: math.exp(np.mean([math.log(max(x, 1e-9)) for x in allw[p]]))
-            for p in POLICIES}
+        emit(f"fig8/geomean_all/{p}", 0.0, f"{geomean(allw[p]):.3f}")
+    return {p: geomean(allw[p]) for p in POLICIES}
 
 
 if __name__ == "__main__":

@@ -1,29 +1,41 @@
 """Fig. 11 reproduction: sensitivity of CIAO-C to the high-cutoff epoch
-length and the high-cutoff threshold (low-cutoff fixed at half)."""
+length and the high-cutoff threshold (low-cutoff fixed at half).
+
+Both sweeps are named ``SimConfig`` variants of one ``repro.core.runner``
+grid; the GTO baseline is a second one-cell grid."""
 from __future__ import annotations
 
-import dataclasses
+from typing import Optional
 
 from benchmarks.common import emit
-from repro.core import make_workload
 from repro.core.interference import DetectorConfig
-from repro.core.simulator import SMSimulator, SimConfig
+from repro.core.runner import ExperimentGrid, run_grid
+from repro.core.simulator import SimConfig
 
 
-def main():
-    wl = make_workload("syrk", scale=0.5)
-    base = SMSimulator(wl, "gto").run().ipc
+def main(processes: Optional[int] = None,
+         json_path: Optional[str] = None):
+    variants = {}
     # epoch sweep (paper: 1K..50K within 15%)
     for epoch in (250, 500, 1000, 2500, 5000):
-        det = DetectorConfig(high_epoch=epoch, low_epoch=max(epoch // 20, 10))
-        r = SMSimulator(wl, "ciao-c", SimConfig(detector=det)).run()
-        emit(f"fig11a/high_epoch={epoch}", 0.0, f"{r.ipc / base:.3f}")
+        det = DetectorConfig(high_epoch=epoch,
+                             low_epoch=max(epoch // 20, 10))
+        variants[f"fig11a/high_epoch={epoch}"] = SimConfig(detector=det)
     # threshold sweep (paper: steady within 5%)
     for cutoff in (0.005, 0.01, 0.02, 0.04):
         det = DetectorConfig(high_epoch=1000, low_epoch=50,
                              high_cutoff=cutoff, low_cutoff=cutoff / 2)
-        r = SMSimulator(wl, "ciao-c", SimConfig(detector=det)).run()
-        emit(f"fig11b/high_cutoff={cutoff}", 0.0, f"{r.ipc / base:.3f}")
+        variants[f"fig11b/high_cutoff={cutoff}"] = SimConfig(detector=det)
+
+    base = run_grid(ExperimentGrid(name="fig11-base", workloads=("syrk",),
+                                   policies=("gto",)),
+                    processes=processes)[0].ipc
+    records = run_grid(ExperimentGrid(name="fig11", workloads=("syrk",),
+                                      policies=("ciao-c",),
+                                      variants=variants),
+                       processes=processes, json_path=json_path)
+    for r in records:
+        emit(r.variant, 0.0, f"{r.ipc / base:.3f}")
 
 
 if __name__ == "__main__":

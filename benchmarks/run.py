@@ -1,15 +1,36 @@
 """Benchmark orchestrator: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (stdout) per the harness contract.
 
+The simulator sweeps (fig4/fig8/fig11) run through the unified
+``repro.core.runner`` subsystem: each is a declarative policy × workload ×
+config grid, fanned out over a multiprocessing pool (``--jobs``) and
+persisted as JSON under ``--out``. ``--quick`` runs a reduced grid as a CI
+smoke test.
+
   python -m benchmarks.run [--only fig8,serving,...] [--scale 0.5]
+                           [--jobs N] [--out DIR] [--quick]
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import pathlib
 import time
 
-from benchmarks.common import header
+from benchmarks.common import emit, header
+
+
+def _quick(jobs: int, out: pathlib.Path) -> None:
+    """Reduced grid (2 workloads × 3 policies, short traces) exercising
+    the runner end-to-end: multiprocessing fan-out + JSON round-trip."""
+    from repro.core.runner import ExperimentGrid, load_records, run_grid
+    grid = ExperimentGrid(name="quick", workloads=("syrk", "kmn"),
+                          policies=("gto", "ciao-p", "ciao-c"), scale=0.2)
+    path = out / "quick.json"
+    records = run_grid(grid, processes=jobs, json_path=str(path))
+    if load_records(str(path)) != records:
+        raise RuntimeError("JSON round-trip mismatch in --quick smoke")
+    for r in records:
+        emit(f"quick/{r.workload}/{r.policy}", 0.0, f"{r.ipc:.4f}")
 
 
 def main() -> None:
@@ -19,20 +40,39 @@ def main() -> None:
                          "serving,kernels,roofline")
     ap.add_argument("--scale", type=float, default=0.5,
                     help="trace-length scale for simulator benches")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="multiprocessing fan-out for runner grids "
+                         "(0 = all cores)")
+    ap.add_argument("--out", default="results",
+                    help="directory for JSON grid results")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced runner smoke grid, then exit")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    out = pathlib.Path(args.out)
+    if args.jobs <= 0:
+        from repro.core.runner import default_processes
+        jobs = default_processes()
+    else:
+        jobs = args.jobs
 
     def want(name: str) -> bool:
         return only is None or name in only
 
     header()
     t0 = time.time()
+    if args.quick:
+        _quick(jobs, out)
+        print(f"# total_bench_seconds,{time.time() - t0:.1f},-")
+        return
     if want("fig4"):
         from benchmarks import bench_interference
-        bench_interference.main()
+        bench_interference.main(processes=jobs,
+                                json_path=str(out / "fig4.json"))
     if want("fig8"):
         from benchmarks import bench_schedulers
-        bench_schedulers.main(scale=args.scale)
+        bench_schedulers.main(scale=args.scale, processes=jobs,
+                              json_path=str(out / "fig8.json"))
     if want("fig9"):
         from benchmarks import bench_phases
         bench_phases.main()
@@ -41,7 +81,8 @@ def main() -> None:
         bench_workingset.main()
     if want("fig11"):
         from benchmarks import bench_sensitivity
-        bench_sensitivity.main()
+        bench_sensitivity.main(processes=jobs,
+                               json_path=str(out / "fig11.json"))
     if want("fig12"):
         from benchmarks import bench_onchip
         bench_onchip.main()

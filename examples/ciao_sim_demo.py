@@ -1,22 +1,24 @@
 """Paper-faithful demo: the SM simulator running all seven schedulers on
 one benchmark per class (LWS / SWS / CI) — the Fig. 8 experiment in
-miniature.
+miniature — followed by a 2-SM chip run where the SMs contend on the
+shared L2/DRAM stage.
 
     PYTHONPATH=src python examples/ciao_sim_demo.py
 """
 from repro.core import make_workload
+from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import run_policy_sweep
 
 POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
             "ciao-c")
 
 
-def main():
+def single_sm():
     for name in ("kmn", "syrk", "backprop"):
         wl = make_workload(name, scale=0.5)
         res = run_policy_sweep(wl, POLICIES)
         gto = res["gto"].ipc
-        print(f"\n{name} [{wl.klass}]  (IPC normalized to GTO)")
+        print(f"\n{name} [{wl.klass}]  (IPC normalized to GTO, 1 SM)")
         print(f"{'policy':10s} {'ipc':>6s} {'hit%':>6s} {'active':>7s} "
               f"{'vta_hits':>9s}")
         for p in POLICIES:
@@ -24,6 +26,28 @@ def main():
             print(f"{p:10s} {r.ipc / gto:6.2f} "
                   f"{100 * r.l1_hit_rate:6.1f} "
                   f"{r.mean_active_warps:7.1f} {r.vta_hits:9d}")
+
+
+def multi_sm(num_sms: int = 2):
+    """Same sweep on a multi-SM chip: every SM runs a full copy of the
+    workload; the shared L2 capacity and DRAM bandwidth now carry
+    cross-SM interference."""
+    gpu = GPUConfig(num_sms=num_sms)
+    for name in ("kmn", "syrk"):
+        wl = make_workload(name, scale=0.25)
+        res = run_gpu_policy_sweep(wl, ("gto", "ciao-p", "ciao-c"), gpu=gpu)
+        gto = res["gto"].ipc
+        print(f"\n{name} [{wl.klass}]  (chip IPC normalized to GTO, "
+              f"{num_sms} SMs)")
+        print(f"{'policy':10s} {'ipc':>6s} {'per-SM ipc':>24s}")
+        for p, r in res.items():
+            per_sm = " ".join(f"{s.ipc:.3f}" for s in r.per_sm)
+            print(f"{p:10s} {r.ipc / gto:6.2f} {per_sm:>24s}")
+
+
+def main():
+    single_sm()
+    multi_sm()
 
 
 if __name__ == "__main__":

@@ -1,8 +1,17 @@
 from repro.core.vta import VictimTagArray  # noqa: F401
 from repro.core.interference import InterferenceDetector, DetectorConfig  # noqa: F401
 from repro.core.onchip import OnChipMemory, OnChipConfig  # noqa: F401
+from repro.core.memory import (  # noqa: F401
+    BankedL2, DRAMModel, L2TagArray, MemoryHierarchy)
 from repro.core.policies import (  # noqa: F401
     GTOPolicy, CCWSPolicy, BestSWLPolicy, StatPCALPolicy,
     CIAOPolicy, make_policy, POLICY_NAMES)
-from repro.core.simulator import SMSimulator, SimConfig, SimResult  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    SMSimulator, SimConfig, SimResult, run_policy_sweep)
+from repro.core.gpu import (  # noqa: F401
+    CTA, CTAScheduler, GPUConfig, GPUResult, GPUSimulator, make_ctas,
+    run_gpu_policy_sweep)
+from repro.core.runner import (  # noqa: F401
+    ExperimentGrid, RunRecord, geomean, index_records, load_records,
+    run_grid, save_records)
 from repro.core.traces import make_workload, WORKLOADS  # noqa: F401

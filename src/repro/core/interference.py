@@ -25,7 +25,7 @@ interference do not mix, so one VTA suffices.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.vta import VictimTagArray
 
@@ -63,6 +63,8 @@ class InterferenceDetector:
         self.irs_inst = 0            # aged copy used as Eq. 1 denominator
         self.irs_hits = [0] * cfg.num_warps   # aged per-warp VTA-hit counters
         self.vta_hit_events = 0
+        # (evictor, victim) -> event count; the Fig. 4 non-uniformity data.
+        self.pair_counts: Dict[Tuple[int, int], int] = {}
         self._high_crossings = 0
         # windowed IRS state: snapshots taken at epoch crossings
         nw = cfg.num_warps
@@ -92,6 +94,8 @@ class InterferenceDetector:
             return None
         self.vta_hit_events += 1
         self.irs_hits[wid % self.cfg.num_warps] += 1
+        key = (evictor, wid)
+        self.pair_counts[key] = self.pair_counts.get(key, 0) + 1
         i = wid % self.cfg.list_entries
         if self.interfering_wid[i] == evictor:
             self.sat_counter[i] = min(self.sat_counter[i] + 1, self.cfg.sat_max)

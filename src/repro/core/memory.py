@@ -1,0 +1,154 @@
+"""Shared memory hierarchy below the SM: banked L2 + multi-channel DRAM.
+
+The paper's GPU (Table I) is a 15-SM GTX480-class chip where all SMs share
+a 768KB 8-way L2 and the DRAM channels. This module models that shared
+stage behind a small interface so one :class:`MemoryHierarchy` instance can
+be private to a single :class:`~repro.core.simulator.SMSimulator` (the
+original single-SM setup) or shared by every SM of a
+:class:`~repro.core.gpu.GPUSimulator`, where the per-bank and per-channel
+queues make cross-SM contention visible: an LWS kernel streaming from one
+SM delays the L2 fills of every other SM.
+
+Timing model (relative fidelity, like the SM core model):
+
+* **L2TagArray** — plain set-associative LRU tag store; hit/miss only.
+* **BankedL2** — address-interleaved banks, each a serial port that accepts
+  one request per ``bank_gap`` cycles; requests queue behind ``free_at``.
+* **DRAMModel** — line-interleaved channels with ``gap`` cycles/request of
+  bandwidth each (the seed model's single ``dram_free`` queue generalized).
+* **MemoryHierarchy** — L2 lookup + queueing, then DRAM on a miss. ``now``
+  is the requesting SM's local cycle; SMs advance in short interleaved time
+  slices (see ``gpu.py``) so their clocks agree closely enough for the
+  shared queues to be meaningful.
+
+Defaults (``l2_bank_gap=0``, ``dram_channels=1``) reproduce the seed
+single-SM timing exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.onchip import LINE
+
+
+class L2TagArray:
+    """Set-associative LRU tag store (hit/miss bookkeeping only)."""
+
+    def __init__(self, size: int, ways: int):
+        self.sets = max(size // (LINE * ways), 1)
+        self.ways = ways
+        self.tags = [[-1] * ways for _ in range(self.sets)]
+        self.lru = [list(range(ways)) for _ in range(self.sets)]
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, line_addr: int) -> bool:
+        s = line_addr % self.sets
+        row = self.tags[s]
+        for w in range(self.ways):
+            if row[w] == line_addr:
+                self.lru[s].remove(w)
+                self.lru[s].append(w)
+                self.hits += 1
+                return True
+        victim = self.lru[s][0]
+        row[victim] = line_addr
+        self.lru[s].remove(victim)
+        self.lru[s].append(victim)
+        self.misses += 1
+        return False
+
+
+class BankedL2:
+    """Address-interleaved L2 banks, each a serial port with a queue."""
+
+    def __init__(self, size: int, ways: int, banks: int = 8,
+                 bank_gap: int = 0):
+        self.tags = L2TagArray(size, ways)
+        self.banks = max(banks, 1)
+        self.bank_gap = bank_gap
+        self.free_at = [0] * self.banks
+
+    @property
+    def hits(self) -> int:
+        return self.tags.hits
+
+    @property
+    def misses(self) -> int:
+        return self.tags.misses
+
+    def access(self, line_addr: int, now: int) -> Tuple[bool, int]:
+        """Returns (hit, queue_delay). The bank is busy for ``bank_gap``
+        cycles after accepting a request; later requests queue."""
+        hit = self.tags.access(line_addr)
+        if not self.bank_gap:
+            return hit, 0
+        b = line_addr % self.banks
+        start = max(now, self.free_at[b])
+        self.free_at[b] = start + self.bank_gap
+        return hit, start - now
+
+
+class DRAMModel:
+    """Per-channel bandwidth queueing: ``gap`` cycles per request."""
+
+    def __init__(self, channels: int = 1, gap: int = 8):
+        self.channels = max(channels, 1)
+        self.gap = gap
+        self.free_at = [0] * self.channels
+        self.requests = 0
+
+    def access(self, line_addr: int, now: int) -> int:
+        """Returns the queueing delay before the request occupies its
+        channel; the channel stays busy for ``gap`` cycles after that."""
+        ch = (line_addr >> 2) % self.channels   # 512B channel interleave
+        start = max(now, self.free_at[ch])
+        self.free_at[ch] = start + self.gap
+        self.requests += 1
+        return start - now
+
+    def utilization(self, now: int) -> float:
+        if now <= 0:
+            return 0.0
+        return min(1.0, self.requests * self.gap / (self.channels * now))
+
+
+class MemoryHierarchy:
+    """L2 + DRAM stage shared by one or many SMs.
+
+    ``access`` returns the full latency of a request that missed in the
+    SM's on-chip stage (L1D / shared memory), including queueing at the L2
+    bank and, on an L2 miss, at the DRAM channel.
+    """
+
+    def __init__(self, *, l2_bytes: int, l2_ways: int, lat_l2: int,
+                 lat_dram: int, dram_gap: int, l2_banks: int = 8,
+                 l2_bank_gap: int = 0, dram_channels: int = 1):
+        self.lat_l2 = lat_l2
+        self.lat_dram = lat_dram
+        self._l2_params = (l2_bytes, l2_ways, l2_banks, l2_bank_gap)
+        self._dram_params = (dram_channels, dram_gap)
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh tags, queues, and counters (run boundaries)."""
+        self.l2 = BankedL2(*self._l2_params)
+        self.dram = DRAMModel(*self._dram_params)
+
+    def access(self, line_addr: int, now: int) -> Tuple[int, str]:
+        """One post-L1 request at SM-local cycle ``now``.
+        Returns (latency, level) with level in {'l2', 'dram'}."""
+        hit, queue = self.l2.access(line_addr, now)
+        if hit:
+            return self.lat_l2 + queue, "l2"
+        dram_queue = self.dram.access(line_addr, now + queue)
+        return self.lat_dram + queue + dram_queue, "dram"
+
+    def utilization(self, now: int) -> float:
+        """DRAM bandwidth utilization seen at cycle ``now`` (drives the
+        statPCAL bypass decision)."""
+        return self.dram.utilization(now)
+
+    def stats(self) -> Dict[str, int]:
+        return {"l2_hits": self.l2.hits, "l2_misses": self.l2.misses,
+                "dram_reqs": self.dram.requests}

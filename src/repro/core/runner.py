@@ -1,0 +1,219 @@
+"""Unified experiment runner: declarative policy × workload × config grids.
+
+Every benchmark used to hand-roll its own sweep loop around
+``SMSimulator``. This module replaces those with one subsystem:
+
+* :class:`ExperimentGrid` — a declarative spec: workload names, policy
+  names, named :class:`SimConfig` variants, trace scale, base seed, and an
+  optional multi-SM :class:`~repro.core.gpu.GPUConfig`.
+* :func:`run_grid` — expands the grid into cells, runs them serially or
+  fanned out over a ``multiprocessing`` pool (spawn context, so no JAX
+  fork hazards), and returns one :class:`RunRecord` per cell in grid
+  order. Workload traces are seeded from ``crc32(grid.seed, workload)``
+  only — every policy/variant of a workload sees identical traces, and
+  results are bit-identical between serial and parallel execution.
+* :func:`save_records` / :func:`load_records` — JSON persistence; a
+  reloaded file compares equal (``==``) to the in-memory records.
+
+Best-SWL / statPCAL cells run the paper's offline ``N_wrp`` limit sweep
+inside the cell (Table II), exactly like ``run_policy_sweep``.
+
+Example::
+
+    grid = ExperimentGrid(name="fig8", workloads=("syrk", "kmn"),
+                          policies=("gto", "ciao-c"))
+    records = run_grid(grid, processes=4, json_path="results/fig8.json")
+    by = index_records(records)
+    rel = by["syrk", "ciao-c", "base"].ipc / by["syrk", "gto", "base"].ipc
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing
+import os
+import pathlib
+import zlib
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
+from repro.core.simulator import SimConfig, run_policy_sweep
+from repro.core.traces import WORKLOADS, make_workload
+
+SCHEMA_VERSION = 1
+BASE_VARIANT = "base"
+
+
+@dataclasses.dataclass
+class ExperimentGrid:
+    name: str
+    workloads: Sequence[str]
+    policies: Sequence[str]
+    # label -> SimConfig; None/empty means a single default-config variant
+    variants: Optional[Mapping[str, SimConfig]] = None
+    scale: float = 0.5
+    seed: int = 0
+    gpu: Optional[GPUConfig] = None      # None = single-SM
+    best_swl_limits: Sequence[int] = (2, 4, 6, 8, 16, 32, 48)
+
+    def variant_items(self) -> List[Tuple[str, Optional[SimConfig]]]:
+        if not self.variants:
+            return [(BASE_VARIANT, None)]
+        return list(self.variants.items())
+
+
+@dataclasses.dataclass
+class RunRecord:
+    """One grid cell's outcome. All fields JSON-round-trip exactly."""
+    grid: str
+    workload: str
+    klass: str
+    policy: str
+    variant: str
+    num_sms: int
+    seed: int
+    scale: float
+    ipc: float
+    cycles: int
+    instructions: int
+    l1_hit_rate: float
+    vta_hits: int
+    mean_active_warps: float
+    stats: Dict[str, int]
+    # interference pair events [evictor, victim, count], most frequent
+    # first (single-SM only; empty for multi-SM chips)
+    pairs: List[List[int]] = dataclasses.field(default_factory=list)
+    per_sm_ipc: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Cell:
+    grid: str
+    workload: str
+    policy: str
+    variant: str
+    cfg: Optional[SimConfig]
+    scale: float
+    seed: int
+    gpu: Optional[GPUConfig]
+    best_swl_limits: Sequence[int]
+
+
+def workload_seed(base_seed: int, workload: str) -> int:
+    """Deterministic per-workload trace seed, shared by every policy and
+    variant so comparisons stay apples-to-apples."""
+    return zlib.crc32(f"{base_seed}:{workload}".encode()) & 0x7FFFFFFF
+
+
+def _run_cell(cell: _Cell) -> RunRecord:
+    wl = make_workload(cell.workload, seed=workload_seed(cell.seed,
+                                                         cell.workload),
+                       scale=cell.scale)
+    if cell.gpu is not None:
+        res = run_gpu_policy_sweep(
+            wl, [cell.policy], cfg=cell.cfg, gpu=cell.gpu,
+            best_swl_limits=tuple(cell.best_swl_limits))[cell.policy]
+        return RunRecord(
+            grid=cell.grid, workload=cell.workload, klass=wl.klass,
+            policy=cell.policy, variant=cell.variant,
+            num_sms=cell.gpu.num_sms, seed=cell.seed, scale=cell.scale,
+            ipc=res.ipc, cycles=res.cycles, instructions=res.instructions,
+            l1_hit_rate=res.l1_hit_rate, vta_hits=res.vta_hits,
+            mean_active_warps=res.mean_active_warps,
+            stats=dict(res.mem_stats),
+            per_sm_ipc=[r.ipc for r in res.per_sm])
+    res = run_policy_sweep(wl, [cell.policy], cfg=cell.cfg,
+                           best_swl_limits=tuple(cell.best_swl_limits)
+                           )[cell.policy]
+    return RunRecord(
+        grid=cell.grid, workload=cell.workload, klass=wl.klass,
+        policy=cell.policy, variant=cell.variant, num_sms=1,
+        seed=cell.seed, scale=cell.scale,
+        ipc=res.ipc, cycles=res.cycles, instructions=res.instructions,
+        l1_hit_rate=res.l1_hit_rate, vta_hits=res.vta_hits,
+        mean_active_warps=res.mean_active_warps, stats=dict(res.stats),
+        pairs=[list(p) for p in res.pairs])
+
+
+def expand_grid(grid: ExperimentGrid) -> List[_Cell]:
+    cells = []
+    for w in grid.workloads:
+        if w not in WORKLOADS:
+            raise ValueError(f"unknown workload {w!r}")
+        for p in grid.policies:
+            for label, cfg in grid.variant_items():
+                cells.append(_Cell(
+                    grid=grid.name, workload=w, policy=p, variant=label,
+                    cfg=cfg, scale=grid.scale, seed=grid.seed,
+                    gpu=grid.gpu, best_swl_limits=grid.best_swl_limits))
+    return cells
+
+
+def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
+             json_path: Optional[str] = None) -> List[RunRecord]:
+    """Run every cell; ``processes`` > 1 fans out over a spawn pool.
+    Records come back in grid order regardless of execution order."""
+    cells = expand_grid(grid)
+    nproc = min(processes or 1, len(cells))
+    if nproc > 1:
+        ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(nproc) as pool:
+            records = pool.map(_run_cell, cells)
+    else:
+        records = [_run_cell(c) for c in cells]
+    if json_path:
+        save_records(records, json_path, grid=grid)
+    return records
+
+
+def default_processes() -> int:
+    return max(os.cpu_count() or 1, 1)
+
+
+# ------------------------------------------------------------ persistence
+def _grid_meta(grid: ExperimentGrid) -> dict:
+    return {
+        "name": grid.name,
+        "workloads": list(grid.workloads),
+        "policies": list(grid.policies),
+        "variants": list(dict(grid.variants).keys()) if grid.variants else
+                    [BASE_VARIANT],
+        "scale": grid.scale,
+        "seed": grid.seed,
+        "num_sms": grid.gpu.num_sms if grid.gpu else 1,
+    }
+
+
+def save_records(records: Sequence[RunRecord], path: str,
+                 grid: Optional[ExperimentGrid] = None) -> str:
+    doc = {"schema": SCHEMA_VERSION,
+           "grid": _grid_meta(grid) if grid else None,
+           "records": [dataclasses.asdict(r) for r in records]}
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(p.suffix + ".tmp")
+    tmp.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    tmp.replace(p)
+    return str(p)
+
+
+def load_records(path: str) -> List[RunRecord]:
+    doc = json.loads(pathlib.Path(path).read_text())
+    if doc.get("schema") != SCHEMA_VERSION:
+        raise ValueError(f"unsupported results schema in {path}")
+    return [RunRecord(**r) for r in doc["records"]]
+
+
+# -------------------------------------------------------------- analysis
+def index_records(records: Sequence[RunRecord]
+                  ) -> Dict[Tuple[str, str, str], RunRecord]:
+    """(workload, policy, variant) -> record."""
+    return {(r.workload, r.policy, r.variant): r for r in records}
+
+
+def geomean(values: Sequence[float]) -> float:
+    import math
+    if not values:
+        return 0.0
+    return math.exp(sum(math.log(max(v, 1e-9)) for v in values)
+                    / len(values))

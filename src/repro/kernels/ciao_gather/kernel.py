@@ -32,6 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUMemorySpace -> MemorySpace
+_ANY_SPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+_ANY = _ANY_SPACE.ANY
+
 
 def _gather_kernel(idx_ref, stream_ref, iso_ref, table_ref, out_ref,
                    stats_ref, tags_scr, data_scr, cnt_scr, *,
@@ -101,7 +105,7 @@ def ciao_gather_kernel(table, indices, streams, iso_map, *,
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((num_streams,), lambda i: (0,),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # table in HBM
+            pl.BlockSpec(memory_space=_ANY),  # table in HBM
         ],
         out_specs=[
             pl.BlockSpec((block_t, d), lambda i: (i, 0)),

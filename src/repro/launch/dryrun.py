@@ -128,7 +128,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = dict(compiled.cost_analysis() or {})
+    cost = H.cost_analysis_dict(compiled)
     mem = _mem_analysis_dict(compiled)
     t0 = time.time()
     hlo = H.analyze(compiled.as_text())

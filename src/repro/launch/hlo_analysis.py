@@ -29,6 +29,15 @@ import math
 import re
 from typing import Any, Dict, List, Optional, Tuple
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-dict-per-device list, newer ones a flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

@@ -1,0 +1,120 @@
+"""Multi-SM GPU model: CTA placement determinism, shared-L2/DRAM
+contention, and the paper's policy ordering surviving on a 2-SM chip."""
+import numpy as np
+import pytest
+
+from repro.core import make_workload
+from repro.core.gpu import (CTA, CTAScheduler, GPUConfig, GPUSimulator,
+                            make_ctas, run_gpu_policy_sweep)
+from repro.core.simulator import SimConfig, SMSimulator
+
+
+def _cta(cta_id, warps):
+    z = np.zeros(1, np.int64)
+    return CTA(cta_id=cta_id, copy=0,
+               traces=[(z.astype(np.uint8), z)] * warps)
+
+
+# ------------------------------------------------------- CTA scheduling
+def test_round_robin_placement_pattern():
+    ctas = [_cta(i, 4) for i in range(7)]
+    placement = CTAScheduler("round-robin").assign(ctas, 3)
+    assert [[c.cta_id for c in sm] for sm in placement] == \
+        [[0, 3, 6], [1, 4], [2, 5]]
+
+
+def test_loose_placement_balances_uneven_ctas():
+    # warp counts 8,1,1,1: round-robin on 2 SMs puts 9 vs 2; loose
+    # fills the lighter SM first.
+    ctas = [_cta(0, 8), _cta(1, 1), _cta(2, 1), _cta(3, 1)]
+    placement = CTAScheduler("loose").assign(ctas, 2)
+    loads = [sum(c.num_warps for c in sm) for sm in placement]
+    assert loads == [8, 3]
+
+
+def test_placement_deterministic():
+    wl = make_workload("syrk", scale=0.25)
+    a = GPUSimulator(wl, "gto", gpu=GPUConfig(num_sms=3)).placement
+    b = GPUSimulator(wl, "gto", gpu=GPUConfig(num_sms=3)).placement
+    assert [[c.cta_id for c in sm] for sm in a] == \
+        [[c.cta_id for c in sm] for sm in b]
+    assert [[c.copy for c in sm] for sm in a] == \
+        [[c.copy for c in sm] for sm in b]
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError):
+        CTAScheduler("random")
+
+
+def test_make_ctas_covers_all_warps():
+    wl = make_workload("syrk", scale=0.25)
+    ctas = make_ctas(wl, 8)
+    assert sum(c.num_warps for c in ctas) == len(wl.traces)
+
+
+# ------------------------------------------------------------ contention
+def test_l2_contention_sublinear_scaling():
+    """Two SMs sharing the L2/DRAM stage on a streaming (LWS) workload
+    must deliver less than 2x the single-SM IPC (chip-level contention,
+    invisible in the old single-SM model)."""
+    wl = make_workload("kmn", scale=0.25)
+    single = SMSimulator(wl, "gto").run()
+    chip = GPUSimulator(wl, "gto", gpu=GPUConfig(num_sms=2)).run()
+    assert chip.instructions == 2 * single.instructions   # replicated
+    assert chip.ipc < 1.8 * single.ipc
+    # both SMs make progress: neither starves behind the other
+    per_sm = [r.ipc for r in chip.per_sm]
+    assert min(per_sm) > 0.25 * max(per_sm)
+
+
+def test_gpu_run_deterministic():
+    wl = make_workload("syrk", scale=0.25)
+    a = GPUSimulator(wl, "ciao-c", gpu=GPUConfig(num_sms=2)).run()
+    b = GPUSimulator(wl, "ciao-c", gpu=GPUConfig(num_sms=2)).run()
+    assert a.ipc == b.ipc and a.cycles == b.cycles
+    assert [r.ipc for r in a.per_sm] == [r.ipc for r in b.per_sm]
+
+
+def test_instance_reuse_is_idempotent():
+    """begin() rebuilds all per-run state (detector, L1, policy, private
+    L2/DRAM queues), so re-running the same instance is deterministic."""
+    wl = make_workload("syrk", scale=0.2)
+    sim = SMSimulator(wl, "statpcal")
+    a, b = sim.run(), sim.run()
+    assert a.ipc == b.ipc and a.stats == b.stats
+    chip = GPUSimulator(wl, "ciao-c", gpu=GPUConfig(num_sms=2))
+    x, y = chip.run(), chip.run()
+    assert x.ipc == y.ipc and x.cycles == y.cycles
+
+
+def test_distribute_mode_partitions_warps():
+    wl = make_workload("syrk", scale=0.25)
+    gpu = GPUSimulator(wl, "gto",
+                       gpu=GPUConfig(num_sms=2, replicate=False))
+    total = sum(sm.n for sm in gpu.sms)
+    assert total == len(wl.traces)
+
+
+# ---------------------------------------------------- policy ordering
+def test_gpu_policy_ordering_sws():
+    """Paper ordering survives chip-level contention on SWS: CIAO's
+    isolation wins big over GTO, and CIAO-C >= CIAO-T (Fig. 8b)."""
+    wl = make_workload("syrk", scale=0.25)
+    res = run_gpu_policy_sweep(wl, ("gto", "ciao-p", "ciao-t", "ciao-c"),
+                               gpu=GPUConfig(num_sms=2))
+    gto = res["gto"].ipc
+    assert res["ciao-p"].ipc > 1.3 * gto
+    assert res["ciao-c"].ipc > 1.3 * gto
+    assert res["ciao-c"].ipc >= 0.95 * res["ciao-t"].ipc
+
+
+def test_gpu_policy_ordering_lws():
+    """LWS under shared-L2/DRAM contention: CIAO-P >= GTO and CIAO-C
+    holds GTO's throughput (paper Fig. 8a)."""
+    wl = make_workload("kmn", scale=0.25)
+    res = run_gpu_policy_sweep(wl, ("gto", "ciao-p", "ciao-c"),
+                               gpu=GPUConfig(num_sms=2))
+    gto = res["gto"].ipc
+    assert res["ciao-p"].ipc >= gto
+    assert res["ciao-c"].ipc >= 0.95 * gto

@@ -35,7 +35,7 @@ def test_cost_analysis_undercounts_vs_analyzer():
         return jax.lax.scan(body, x, w)[0].sum()
 
     compiled = jax.jit(f).lower(w, x).compile()
-    xla_flops = compiled.cost_analysis().get("flops", 0)
+    xla_flops = H.cost_analysis_dict(compiled).get("flops", 0)
     res = H.analyze(compiled.as_text())
     assert res["flops"] >= 9 * xla_flops / 2   # ~10x undercount recovered
 

@@ -1,0 +1,92 @@
+"""Experiment-runner subsystem: grid expansion, deterministic seeding,
+serial == multiprocessing, and the JSON round-trip contract."""
+import dataclasses
+
+import pytest
+
+from repro.core.gpu import GPUConfig
+from repro.core.interference import DetectorConfig
+from repro.core.runner import (ExperimentGrid, expand_grid, load_records,
+                               run_grid, save_records, index_records,
+                               workload_seed)
+from repro.core.simulator import SimConfig
+
+QUICK = ExperimentGrid(name="t", workloads=("syrk",),
+                       policies=("gto", "ciao-p"), scale=0.2)
+
+
+def test_expand_grid_order_and_count():
+    grid = ExperimentGrid(
+        name="g", workloads=("syrk", "kmn"), policies=("gto", "ciao-c"),
+        variants={"a": SimConfig(), "b": SimConfig(dram_gap=4)})
+    cells = expand_grid(grid)
+    assert len(cells) == 8
+    assert [(c.workload, c.policy, c.variant) for c in cells[:3]] == \
+        [("syrk", "gto", "a"), ("syrk", "gto", "b"), ("syrk", "ciao-c", "a")]
+
+
+def test_unknown_workload_rejected():
+    with pytest.raises(ValueError):
+        expand_grid(ExperimentGrid(name="g", workloads=("nope",),
+                                   policies=("gto",)))
+
+
+def test_workload_seed_stable_across_policies():
+    assert workload_seed(0, "syrk") == workload_seed(0, "syrk")
+    assert workload_seed(0, "syrk") != workload_seed(1, "syrk")
+
+
+def test_run_grid_deterministic():
+    a = run_grid(QUICK)
+    b = run_grid(QUICK)
+    assert a == b
+
+
+def test_json_round_trip_equals_in_memory(tmp_path):
+    path = str(tmp_path / "grid.json")
+    records = run_grid(QUICK, json_path=path)
+    assert load_records(path) == records
+
+
+def test_serial_matches_multiprocessing():
+    serial = run_grid(QUICK, processes=1)
+    parallel = run_grid(QUICK, processes=2)
+    assert serial == parallel
+
+
+def test_variants_apply_config():
+    grid = ExperimentGrid(
+        name="v", workloads=("syrk",), policies=("ciao-c",), scale=0.2,
+        variants={"tight": SimConfig(detector=DetectorConfig(
+            high_epoch=500, low_epoch=25)),
+            "loose": SimConfig(detector=DetectorConfig(
+                high_epoch=5000, low_epoch=250))})
+    by = index_records(run_grid(grid))
+    assert by["syrk", "ciao-c", "tight"].ipc != \
+        by["syrk", "ciao-c", "loose"].ipc
+
+
+def test_gpu_grid_records_per_sm(tmp_path):
+    grid = dataclasses.replace(QUICK, policies=("gto",),
+                               gpu=GPUConfig(num_sms=2))
+    path = str(tmp_path / "gpu.json")
+    records = run_grid(grid, json_path=path)
+    assert records[0].num_sms == 2
+    assert len(records[0].per_sm_ipc) == 2
+    assert load_records(path) == records
+
+
+def test_schema_guard(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema": 99, "records": []}')
+    with pytest.raises(ValueError, match="schema"):
+        load_records(str(path))
+
+
+def test_pairs_survive_round_trip(tmp_path):
+    grid = ExperimentGrid(name="p", workloads=("kmn",),
+                          policies=("gto",), scale=0.2)
+    path = str(tmp_path / "p.json")
+    records = run_grid(grid, json_path=path)
+    assert records[0].pairs, "LWS under GTO must produce pair events"
+    assert load_records(path)[0].pairs == records[0].pairs

@@ -23,7 +23,9 @@ def _env2d():
 
 def test_rules_filter_missing_axes():
     env = _env2d()
-    assert env.pspec("act_batch", None, "act_mlp") == P(("data",), None,
+    # bare axis name, not a 1-tuple: older jax PartitionSpec __eq__
+    # doesn't normalize ('data',) == 'data'
+    assert env.pspec("act_batch", None, "act_mlp") == P("data", None,
                                                         "model")
 
 
