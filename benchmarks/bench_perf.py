@@ -1,0 +1,273 @@
+"""PR-2 perf-tracking harness: instr/s per component + full-run A/B vs the
+vendored seed core, written to ``BENCH_PR2.json`` at the repo root.
+
+Measures the live ``repro.core`` simulator against ``benchmarks.seed_core``
+(the PR-1 core frozen at commit 9de8cc9) *in one process, interleaved*:
+this container's clock-for-clock speed drifts by ~2x over minutes, so
+cross-session absolute instr/s are meaningless — the speedup is reported
+as the ratio of best-of-N interleaved times, which both sides sample under
+the same conditions.
+
+Sections:
+
+* components — isolated primitive throughput (ops/s), new vs seed:
+  L1 path (``OnChipMemory.access``, mixed hit/miss), smem path (isolated
+  accesses), detector (eviction+probe pairs), scheduler (a CI-class
+  full run, ~95% ALU, dominated by the dispatch loop).
+* full_runs — end-to-end ``run()`` instr/s across the paper's workload
+  classes (LWS ``bicg``, SWS ``syrk``, CI ``conv2d``, each under the
+  class-relevant CIAO policy) and a 2-SM ``GPUSimulator`` run on a shared
+  L2/DRAM stage.
+
+Usage::
+
+    python -m benchmarks.bench_perf [--quick] [--repeats N] [--scale S]
+                                    [--out BENCH_PR2.json]
+                                    [--floor-ratio R]
+
+``--floor-ratio R`` exits nonzero if the headline (bicg/ciao-c) speedup
+over the seed core falls below R — the CI guard against accidental
+re-Pythonization of the hot path. The floor is a *ratio*, not an absolute
+rate, so noisy runners do not flap the job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import time
+from typing import Callable, Dict, List, Tuple
+
+from benchmarks.common import emit, header
+
+# The seed core measured ~70-110K instr/s on bicg/ciao-c scale=1.0 on the
+# PR-2 dev container (81,108 at the session-start measurement; the spread
+# is machine drift). Recorded here per the issue; the live baseline is
+# re-measured on every harness run.
+RECORDED_SEED_BASELINE_INSTR_S = 81_108
+
+SCHEMA_VERSION = 1
+
+
+def _best_seconds(fn: Callable[[], object], repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _ab(new_fn: Callable[[], object], seed_fn: Callable[[], object],
+        repeats: int) -> Tuple[float, float]:
+    """Interleaved best-of-N wall times (new, seed)."""
+    new_best = seed_best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        new_fn()
+        new_best = min(new_best, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        seed_fn()
+        seed_best = min(seed_best, time.perf_counter() - t0)
+    return new_best, seed_best
+
+
+# ------------------------------------------------------------- components
+def _bench_l1(repeats: int, n_ops: int = 120_000) -> Dict[str, float]:
+    import numpy as np
+    from benchmarks.seed_core.interference import (
+        DetectorConfig as SeedDC, InterferenceDetector as SeedDet)
+    from benchmarks.seed_core.onchip import (
+        OnChipConfig as SeedOC, OnChipMemory as SeedMem)
+    from repro.core.interference import DetectorConfig, InterferenceDetector
+    from repro.core.onchip import OnChipConfig, OnChipMemory
+
+    rng = np.random.default_rng(0)
+    addrs = (rng.integers(0, 4000, n_ops) * 128).tolist()
+    wids = (rng.integers(0, 48, n_ops)).tolist()
+
+    def run_new():
+        mem = OnChipMemory(OnChipConfig(),
+                           InterferenceDetector(DetectorConfig()))
+        for w, a in zip(wids, addrs):
+            mem.access(w, a, count_instruction=False)
+
+    def run_seed():
+        mem = SeedMem(SeedOC(), SeedDet(SeedDC()))
+        for w, a in zip(wids, addrs):
+            mem.access(w, a, count_instruction=False)
+
+    nb, sb = _ab(run_new, run_seed, repeats)
+    return {"new_ops_s": n_ops / nb, "seed_ops_s": n_ops / sb,
+            "ratio": sb / nb}
+
+
+def _bench_smem(repeats: int, n_ops: int = 120_000) -> Dict[str, float]:
+    import numpy as np
+    from benchmarks.seed_core.interference import (
+        DetectorConfig as SeedDC, InterferenceDetector as SeedDet)
+    from benchmarks.seed_core.onchip import (
+        OnChipConfig as SeedOC, OnChipMemory as SeedMem)
+    from repro.core.interference import DetectorConfig, InterferenceDetector
+    from repro.core.onchip import OnChipConfig, OnChipMemory
+
+    rng = np.random.default_rng(1)
+    addrs = (rng.integers(0, 1200, n_ops) * 128).tolist()
+    wids = (rng.integers(0, 48, n_ops)).tolist()
+
+    def run_new():
+        mem = OnChipMemory(OnChipConfig(),
+                           InterferenceDetector(DetectorConfig()))
+        for w, a in zip(wids, addrs):
+            mem.access(w, a, isolated=True, count_instruction=False)
+
+    def run_seed():
+        mem = SeedMem(SeedOC(), SeedDet(SeedDC()))
+        for w, a in zip(wids, addrs):
+            mem.access(w, a, isolated=True, count_instruction=False)
+
+    nb, sb = _ab(run_new, run_seed, repeats)
+    return {"new_ops_s": n_ops / nb, "seed_ops_s": n_ops / sb,
+            "ratio": sb / nb}
+
+
+def _bench_detector(repeats: int, n_ops: int = 120_000) -> Dict[str, float]:
+    import numpy as np
+    from benchmarks.seed_core.interference import (
+        DetectorConfig as SeedDC, InterferenceDetector as SeedDet)
+    from repro.core.interference import DetectorConfig, InterferenceDetector
+
+    rng = np.random.default_rng(2)
+    lines = rng.integers(0, 3000, n_ops).tolist()
+    owners = rng.integers(0, 48, n_ops).tolist()
+    evictors = rng.integers(0, 48, n_ops).tolist()
+
+    def drive(det):
+        for o, line, e in zip(owners, lines, evictors):
+            det.on_eviction(o, line, e)
+            det.on_miss(e, line)
+
+    nb, sb = _ab(lambda: drive(InterferenceDetector(DetectorConfig())),
+                 lambda: drive(SeedDet(SeedDC())), repeats)
+    return {"new_ops_s": 2 * n_ops / nb, "seed_ops_s": 2 * n_ops / sb,
+            "ratio": sb / nb}
+
+
+# -------------------------------------------------------------- full runs
+def _full_run(kind: str, workload_name: str, policy: str, scale: float,
+              repeats: int, num_sms: int = 1) -> Dict[str, float]:
+    from benchmarks.seed_core.simulator import SMSimulator as SeedSM
+    from repro.core.gpu import GPUConfig, GPUSimulator
+    from repro.core.simulator import SMSimulator
+    from repro.core.traces import make_workload
+
+    wl = make_workload(workload_name, seed=123, scale=scale)
+    if kind == "gpu":
+        gpu = GPUConfig(num_sms=num_sms)
+        res = GPUSimulator(wl, policy, gpu=gpu).run()
+        instr = res.instructions
+        nb = _best_seconds(
+            lambda: GPUSimulator(wl, policy, gpu=gpu).run(), repeats)
+        # no multi-SM model exists in the seed core; report absolute only
+        return {"instructions": instr, "new_instr_s": instr / nb}
+    res = SMSimulator(wl, policy).run()
+    instr = res.instructions
+    nb, sb = _ab(lambda: SMSimulator(wl, policy).run(),
+                 lambda: SeedSM(wl, policy).run(), repeats)
+    return {"instructions": instr, "new_instr_s": instr / nb,
+            "seed_instr_s": instr / sb, "ratio": sb / nb}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scale/repeats for the CI perf smoke")
+    ap.add_argument("--repeats", type=int, default=0,
+                    help="interleaved A/B repeats (default 4, quick 2)")
+    ap.add_argument("--scale", type=float, default=0.0,
+                    help="trace scale for full runs (default 1.0, "
+                         "quick 0.25)")
+    ap.add_argument("--out", default="BENCH_PR2.json",
+                    help="output JSON path (repo-root relative)")
+    ap.add_argument("--floor-ratio", type=float, default=0.0,
+                    help="fail if bicg/ciao-c speedup over the seed core "
+                         "is below this ratio")
+    args = ap.parse_args()
+    repeats = args.repeats or (2 if args.quick else 4)
+    scale = args.scale or (0.25 if args.quick else 1.0)
+
+    header()
+    doc: Dict = {
+        "schema": SCHEMA_VERSION,
+        "unix_time": int(time.time()),
+        "machine": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "cpus": os.cpu_count()},
+        "recorded_seed_baseline_instr_s": RECORDED_SEED_BASELINE_INSTR_S,
+        "seed_core": "benchmarks/seed_core (PR-1 @ 9de8cc9)",
+        "config": {"repeats": repeats, "scale": scale,
+                   "quick": args.quick},
+        "components": {},
+        "full_runs": {},
+    }
+
+    comp_benches: List[Tuple[str, Callable[[], Dict[str, float]]]] = [
+        ("l1_path", lambda: _bench_l1(repeats)),
+        ("smem_path", lambda: _bench_smem(repeats)),
+        ("detector", lambda: _bench_detector(repeats)),
+    ]
+    for name, fn in comp_benches:
+        r = fn()
+        doc["components"][name] = r
+        emit(f"perf/component/{name}", 0.0,
+             f"new={r['new_ops_s']:,.0f}ops/s;ratio={r['ratio']:.2f}x")
+
+    runs = [
+        ("sm", "bicg", "ciao-c", 1),      # LWS headline (issue baseline)
+        ("sm", "conv2d", "ciao-c", 1),    # CI class: dispatch/scheduler
+    ]
+    if not args.quick:
+        runs += [
+            ("sm", "syrk", "ciao-p", 1),  # SWS class: smem redirection
+            ("sm", "bicg", "gto", 1),
+            ("gpu", "syrk", "ciao-c", 2),  # shared-L2 2-SM chip
+        ]
+    for kind, wl_name, policy, sms in runs:
+        key = f"{wl_name}/{policy}" + (f"/{sms}sm" if kind == "gpu" else "")
+        r = _full_run(kind, wl_name, policy, scale, repeats, num_sms=sms)
+        doc["full_runs"][key] = r
+        extra = (f";seed={r['seed_instr_s']:,.0f};ratio={r['ratio']:.2f}x"
+                 if "ratio" in r else "")
+        emit(f"perf/run/{key}", 0.0,
+             f"new={r['new_instr_s']:,.0f}instr/s{extra}")
+
+    headline = doc["full_runs"].get("bicg/ciao-c", {})
+    doc["headline"] = {
+        "workload": "bicg", "policy": "ciao-c",
+        "new_instr_s": headline.get("new_instr_s"),
+        "seed_instr_s": headline.get("seed_instr_s"),
+        "ratio": headline.get("ratio"),
+        "note": "ratio = best-of-N interleaved seed/new wall time; the "
+                "container's absolute speed drifts ~2x between sessions, "
+                "so cross-run instr/s comparisons are not meaningful",
+    }
+
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    emit("perf/json", 0.0, str(out))
+
+    if args.floor_ratio:
+        ratio = headline.get("ratio", 0.0)
+        if ratio < args.floor_ratio:
+            print(f"# FAIL: bicg/ciao-c speedup {ratio:.2f}x below floor "
+                  f"{args.floor_ratio:.2f}x")
+            return 1
+        emit("perf/floor", 0.0,
+             f"ok:{ratio:.2f}x>={args.floor_ratio:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

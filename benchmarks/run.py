@@ -37,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig4,fig8,fig9,fig10,fig11,fig12,"
-                         "serving,kernels,roofline")
+                         "serving,kernels,roofline,perf")
     ap.add_argument("--scale", type=float, default=0.5,
                     help="trace-length scale for simulator benches")
     ap.add_argument("--jobs", type=int, default=0,
@@ -95,6 +95,14 @@ def main() -> None:
     if want("roofline"):
         from benchmarks import roofline
         roofline.main()
+    if want("perf"):
+        import sys
+        from benchmarks import bench_perf
+        argv, sys.argv = sys.argv, [sys.argv[0]]
+        try:
+            bench_perf.main()
+        finally:
+            sys.argv = argv
     print(f"# total_bench_seconds,{time.time() - t0:.1f},-")
 
 

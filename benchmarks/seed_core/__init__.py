@@ -1,0 +1,7 @@
+"""Vendored PR-1 ("seed") simulator core, frozen at commit 9de8cc9.
+
+Benchmark fixture only: ``benchmarks/bench_perf.py`` runs this core and the
+live ``repro.core`` side by side in one process, so the reported speedup is
+immune to machine-speed drift (this container's clock-for-clock throughput
+varies by ~2x over time). Do not import from production code.
+"""

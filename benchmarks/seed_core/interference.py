@@ -21,21 +21,13 @@ Faithful implementation of:
 The same detector instance is shared by the on-chip memory model (CIAO-P)
 and the warp scheduler (CIAO-T) — paper §III-C notes L1D and shared-memory
 interference do not mix, so one VTA suffices.
-
-The interference/pair lists and all per-warp counters are flat int arrays;
-epoch snapshots (``poll_epochs``) read the VTA's per-warp hit counters as
-one vector instead of looping the 48 warps, which together with the
-simulator's batched instruction counting keeps epoch upkeep off the
-per-instruction hot path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core.vta import VictimTagArray
+from benchmarks.seed_core.vta import VictimTagArray
 
 NO_WARP = -1
 
@@ -60,41 +52,30 @@ class DetectorConfig:
 
 
 class InterferenceDetector:
-    __slots__ = ("cfg", "vta", "interfering_wid", "sat_counter", "pair_list",
-                 "inst_total", "irs_inst", "irs_hits", "vta_hit_events",
-                 "pair_counts", "_high_crossings", "_low_idx", "_high_idx",
-                 "_low_base_hits", "_high_base_hits", "_low_base_inst",
-                 "_high_base_inst", "irs_low_snap", "irs_high_snap",
-                 "_wid_sets")
-
-    def __init__(self, cfg: Optional[DetectorConfig] = None):
-        # None default: a shared mutable DetectorConfig() default instance
-        # would leak state (e.g. epoch overrides) between detectors.
-        self.cfg = cfg = cfg if cfg is not None else DetectorConfig()
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
         self.vta = VictimTagArray(cfg.vta_sets, cfg.vta_tags_per_set)
         n = cfg.list_entries
-        self.interfering_wid = np.full(n, NO_WARP, np.int64)
-        self.sat_counter = np.zeros(n, np.int64)
-        self.pair_list = np.full((n, 2), NO_WARP, np.int64)
+        self.interfering_wid: List[int] = [NO_WARP] * n
+        self.sat_counter: List[int] = [0] * n
+        self.pair_list: List[List[int]] = [[NO_WARP, NO_WARP] for _ in range(n)]
         self.inst_total = 0          # Inst-total counter (per SM)
         self.irs_inst = 0            # aged copy used as Eq. 1 denominator
-        nw = cfg.num_warps
-        self.irs_hits = np.zeros(nw, np.int64)  # aged per-warp VTA-hit ctrs
+        self.irs_hits = [0] * cfg.num_warps   # aged per-warp VTA-hit counters
         self.vta_hit_events = 0
         # (evictor, victim) -> event count; the Fig. 4 non-uniformity data.
         self.pair_counts: Dict[Tuple[int, int], int] = {}
         self._high_crossings = 0
         # windowed IRS state: snapshots taken at epoch crossings
+        nw = cfg.num_warps
         self._low_idx = 0
         self._high_idx = 0
-        self._low_base_hits = np.zeros(nw, np.int64)
-        self._high_base_hits = np.zeros(nw, np.int64)
+        self._low_base_hits = [0] * nw
+        self._high_base_hits = [0] * nw
         self._low_base_inst = 0
         self._high_base_inst = 0
-        self.irs_low_snap = np.zeros(nw, np.float64)
-        self.irs_high_snap = np.zeros(nw, np.float64)
-        # per-warp view into the VTA hit counters (wid -> vta set index)
-        self._wid_sets = np.arange(nw) % cfg.vta_sets
+        self.irs_low_snap = [0.0] * nw
+        self.irs_high_snap = [0.0] * nw
 
     # ------------------------------------------------------------- events
     def on_instruction(self, n: int = 1) -> None:
@@ -108,13 +89,8 @@ class InterferenceDetector:
     def on_miss(self, wid: int, line_addr: int) -> Optional[int]:
         """Probe VTA; on a VTA hit update the interference list (Fig. 4c)
         and return the interfering WID."""
-        vta = self.vta
-        # the dominant outcome is a VTA miss: answer it with one dict probe
-        # before paying for the full FIFO walk
-        if line_addr not in vta._member[wid % vta.num_sets]:
-            return None
-        evictor = vta.probe(wid, line_addr)
-        if evictor is None:  # pragma: no cover - membership implies a hit
+        evictor = self.vta.probe(wid, line_addr)
+        if evictor is None:
             return None
         self.vta_hit_events += 1
         self.irs_hits[wid % self.cfg.num_warps] += 1
@@ -122,8 +98,7 @@ class InterferenceDetector:
         self.pair_counts[key] = self.pair_counts.get(key, 0) + 1
         i = wid % self.cfg.list_entries
         if self.interfering_wid[i] == evictor:
-            self.sat_counter[i] = min(self.sat_counter[i] + 1,
-                                      self.cfg.sat_max)
+            self.sat_counter[i] = min(self.sat_counter[i] + 1, self.cfg.sat_max)
         elif self.interfering_wid[i] == NO_WARP:
             self.interfering_wid[i] = evictor
             self.sat_counter[i] = 0
@@ -152,15 +127,15 @@ class InterferenceDetector:
         cfg = self.cfg
         active_warps = max(active_warps, 1)
         crossed_low = crossed_high = False
-        hits = self.vta.hits
         low_idx = self.inst_total // cfg.low_epoch
         if low_idx != self._low_idx:
             self._low_idx = low_idx
             window = max(self.inst_total - self._low_base_inst, 1)
             per_warp = window / active_warps
-            cur = hits[self._wid_sets]
-            self.irs_low_snap = (cur - self._low_base_hits) / per_warp
-            self._low_base_hits = cur
+            for w in range(cfg.num_warps):
+                h = self.vta.hit_count(w) - self._low_base_hits[w]
+                self.irs_low_snap[w] = h / per_warp
+                self._low_base_hits[w] = self.vta.hit_count(w)
             self._low_base_inst = self.inst_total
             crossed_low = True
         high_idx = self.inst_total // cfg.high_epoch
@@ -168,51 +143,50 @@ class InterferenceDetector:
             self._high_idx = high_idx
             window = max(self.inst_total - self._high_base_inst, 1)
             per_warp = window / active_warps
-            cur = hits[self._wid_sets]
-            self.irs_high_snap = (cur - self._high_base_hits) / per_warp
-            self._high_base_hits = cur
+            for w in range(cfg.num_warps):
+                h = self.vta.hit_count(w) - self._high_base_hits[w]
+                self.irs_high_snap[w] = h / per_warp
+                self._high_base_hits[w] = self.vta.hit_count(w)
             self._high_base_inst = self.inst_total
             crossed_high = True
             self._high_crossings += 1
             if cfg.aging_high_epochs and \
                     self._high_crossings % cfg.aging_high_epochs == 0:
                 self.irs_inst //= 2
-                self.irs_hits //= 2
+                self.irs_hits = [h // 2 for h in self.irs_hits]
         return crossed_low, crossed_high
 
     def irs_low(self, wid: int) -> float:
-        return float(self.irs_low_snap[wid % self.cfg.num_warps])
+        return self.irs_low_snap[wid % self.cfg.num_warps]
 
     def irs_high(self, wid: int) -> float:
-        return float(self.irs_high_snap[wid % self.cfg.num_warps])
+        return self.irs_high_snap[wid % self.cfg.num_warps]
 
     def most_interfering(self, wid: int) -> int:
-        return int(self.interfering_wid[wid % self.cfg.list_entries])
+        return self.interfering_wid[wid % self.cfg.list_entries]
 
     # ------------------------------------------------------------ pair list
     def record_isolation(self, interfering: int, interfered: int) -> None:
-        self.pair_list[interfering % self.cfg.list_entries, 0] = interfered
+        self.pair_list[interfering % self.cfg.list_entries][0] = interfered
 
     def record_stall(self, interfering: int, interfered: int) -> None:
-        self.pair_list[interfering % self.cfg.list_entries, 1] = interfered
+        self.pair_list[interfering % self.cfg.list_entries][1] = interfered
 
     def isolation_trigger(self, wid: int) -> int:
-        return int(self.pair_list[wid % self.cfg.list_entries, 0])
+        return self.pair_list[wid % self.cfg.list_entries][0]
 
     def stall_trigger(self, wid: int) -> int:
-        return int(self.pair_list[wid % self.cfg.list_entries, 1])
+        return self.pair_list[wid % self.cfg.list_entries][1]
 
     def clear_isolation(self, wid: int) -> None:
-        self.pair_list[wid % self.cfg.list_entries, 0] = NO_WARP
+        self.pair_list[wid % self.cfg.list_entries][0] = NO_WARP
 
     def clear_stall(self, wid: int) -> None:
-        self.pair_list[wid % self.cfg.list_entries, 1] = NO_WARP
+        self.pair_list[wid % self.cfg.list_entries][1] = NO_WARP
 
     # -------------------------------------------------------------- epochs
     def at_high_epoch(self) -> bool:
-        return self.inst_total > 0 and \
-            self.inst_total % self.cfg.high_epoch == 0
+        return self.inst_total > 0 and self.inst_total % self.cfg.high_epoch == 0
 
     def at_low_epoch(self) -> bool:
-        return self.inst_total > 0 and \
-            self.inst_total % self.cfg.low_epoch == 0
+        return self.inst_total > 0 and self.inst_total % self.cfg.low_epoch == 0

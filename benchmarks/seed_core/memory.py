@@ -28,64 +28,39 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-from repro.core.onchip import LINE
+from benchmarks.seed_core.onchip import LINE
 
 
 class L2TagArray:
-    """Set-associative LRU tag store (hit/miss bookkeeping only).
-
-    Same layout as the PR-2 L1: flat tag/stamp tables indexed
-    ``set * ways + way`` with LRU as monotonic touch stamps (victim = min
-    stamp of the set's slice) plus an O(1) ``line -> flat slot`` residency
-    index, replacing the seed's per-set Python lists with
-    ``list.remove``/``append`` LRU.
-    """
-
-    __slots__ = ("sets", "ways", "tags", "stamp", "_line_index", "_tick",
-                 "hits", "misses")
+    """Set-associative LRU tag store (hit/miss bookkeeping only)."""
 
     def __init__(self, size: int, ways: int):
         self.sets = max(size // (LINE * ways), 1)
         self.ways = ways
-        nf = self.sets * ways
-        self.tags = [-1] * nf
-        self.stamp = [0] * nf
-        self._line_index: dict = {}
-        self._tick = 1
+        self.tags = [[-1] * ways for _ in range(self.sets)]
+        self.lru = [list(range(ways)) for _ in range(self.sets)]
         self.hits = 0
         self.misses = 0
 
     def access(self, line_addr: int) -> bool:
-        f = self._line_index.get(line_addr)
-        hit = f is not None
-        if hit:
-            self.hits += 1
-        else:
-            ways = self.ways
-            stamp = self.stamp
-            base = (line_addr % self.sets) * ways
-            f = base                            # LRU victim (first tie wins)
-            bs = stamp[base]
-            for g in range(base + 1, base + ways):
-                v = stamp[g]
-                if v < bs:
-                    bs = v
-                    f = g
-            old = self.tags[f]
-            if old >= 0:
-                del self._line_index[old]
-            self.tags[f] = line_addr
-            self._line_index[line_addr] = f
-            self.misses += 1
-        self.stamp[f] = self._tick
-        self._tick += 1
-        return hit
+        s = line_addr % self.sets
+        row = self.tags[s]
+        for w in range(self.ways):
+            if row[w] == line_addr:
+                self.lru[s].remove(w)
+                self.lru[s].append(w)
+                self.hits += 1
+                return True
+        victim = self.lru[s][0]
+        row[victim] = line_addr
+        self.lru[s].remove(victim)
+        self.lru[s].append(victim)
+        self.misses += 1
+        return False
 
 
 class BankedL2:
     """Address-interleaved L2 banks, each a serial port with a queue."""
-
-    __slots__ = ("tags", "banks", "bank_gap", "free_at")
 
     def __init__(self, size: int, ways: int, banks: int = 8,
                  bank_gap: int = 0):
@@ -117,8 +92,6 @@ class BankedL2:
 class DRAMModel:
     """Per-channel bandwidth queueing: ``gap`` cycles per request."""
 
-    __slots__ = ("channels", "gap", "free_at", "requests")
-
     def __init__(self, channels: int = 1, gap: int = 8):
         self.channels = max(channels, 1)
         self.gap = gap
@@ -148,9 +121,6 @@ class MemoryHierarchy:
     bank and, on an L2 miss, at the DRAM channel.
     """
 
-    __slots__ = ("lat_l2", "lat_dram", "_l2_params", "_dram_params",
-                 "l2", "dram")
-
     def __init__(self, *, l2_bytes: int, l2_ways: int, lat_l2: int,
                  lat_dram: int, dram_gap: int, l2_banks: int = 8,
                  l2_bank_gap: int = 0, dram_channels: int = 1):
@@ -168,11 +138,7 @@ class MemoryHierarchy:
     def access(self, line_addr: int, now: int) -> Tuple[int, str]:
         """One post-L1 request at SM-local cycle ``now``.
         Returns (latency, level) with level in {'l2', 'dram'}."""
-        l2 = self.l2
-        if l2.bank_gap:
-            hit, queue = l2.access(line_addr, now)
-        else:                    # unqueued L2: skip the bank bookkeeping
-            hit, queue = l2.tags.access(line_addr), 0
+        hit, queue = self.l2.access(line_addr, now)
         if hit:
             return self.lat_l2 + queue, "l2"
         dram_queue = self.dram.access(line_addr, now + queue)

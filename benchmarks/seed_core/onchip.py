@@ -1,0 +1,268 @@
+"""On-chip memory model: L1D + shared-memory-as-cache (paper §II-A, §IV-B).
+
+GTX480-like SM (Table I): 16KB L1D, 128-byte lines, 4-way LRU, XOR set-index
+hashing [26]; 48KB shared memory in the same physical structure (32 banks).
+The CIAO additions:
+
+* **SMMT** — Shared Memory Management Table; one entry per CTA (base, size).
+  CIAO reads it to find the *unused* region and reserves that region (a new
+  SMMT entry) for its direct-mapped victim-isolation cache.
+
+* **Address translation unit** (Fig. 7c) — splits a global address into
+  byte-offset F (3b, 8-byte bank rows), bank B (4b, 16 banks/group), bank
+  group G (1b), row R (up to 8b), remainder = tag. A 128-byte data block is
+  striped across the 16 banks of group ``G``; its 31-bit tag (25b addr + 6b
+  WID) lives in the *opposite* group (``1-G``) so tag probe and data access
+  proceed in parallel, bank-conflict-free — asserted structurally in tests.
+
+* **MSHR** — entries extended with the translated shared-memory address so
+  L2 fill responses can be routed straight into shared memory; L1D->smem
+  *migration* moves a present line through the response queue (single-copy
+  coherence invariant, §III-B "Performance optimization and coherence").
+
+Latencies are attached by the simulator; this module returns event kinds:
+  'l1_hit' | 'l1_miss' | 'smem_hit' | 'smem_miss' | 'smem_migrate' | 'bypass'
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from benchmarks.seed_core.interference import InterferenceDetector
+
+LINE = 128
+
+
+@dataclasses.dataclass
+class OnChipConfig:
+    l1_bytes: int = 16 * 1024
+    line_bytes: int = LINE
+    ways: int = 4
+    smem_bytes: int = 48 * 1024
+    smem_banks: int = 32
+    bank_row_bytes: int = 8          # 64-bit accesses per bank
+    xor_hash: bool = True            # set-index hashing [26]
+    mshr_entries: int = 32
+    # Refinement over the paper (ablatable): a 1-bit "reused" flag per L1D
+    # line; only evictions of *reused* lines enter the VTA. Streaming
+    # victims (never re-referenced) otherwise flood the 8-entry per-warp
+    # FIFO and push out the genuine lost-locality evidence.
+    reuse_filter: bool = False
+
+    @property
+    def num_sets(self) -> int:
+        return self.l1_bytes // (self.line_bytes * self.ways)
+
+
+class SMMT:
+    """Shared Memory Management Table (§II-A, [17])."""
+
+    def __init__(self, total_bytes: int):
+        self.total = total_bytes
+        self.entries: Dict[str, Tuple[int, int]] = {}  # name -> (base, size)
+
+    def allocate(self, name: str, size: int) -> int:
+        base = sum(s for _, s in self.entries.values())
+        if base + size > self.total:
+            raise ValueError("shared memory exhausted")
+        self.entries[name] = (base, size)
+        return base
+
+    def unused(self) -> int:
+        return self.total - sum(s for _, s in self.entries.values())
+
+    def reserve_unused(self, name: str = "__ciao__") -> Tuple[int, int]:
+        size = self.unused()
+        base = self.allocate(name, size)
+        return base, size
+
+    def release(self, name: str) -> None:
+        self.entries.pop(name, None)
+
+
+@dataclasses.dataclass
+class TranslatedAddr:
+    """Fig. 7c field split of a block address within the reserved region."""
+    byte_off: int     # F: 3 bits
+    bank: int         # B: 4 bits
+    group: int        # G: 1 bit
+    row: int          # R: row index within the region
+    tag: int          # remaining bits (+ 6-bit WID stored alongside)
+    tag_group: int    # == 1 - group (opposite bank group)
+    tag_bank: int
+    tag_row: int
+
+
+class AddressTranslationUnit:
+    """Global address -> shared-memory (row, group, bank) + tag placement."""
+
+    def __init__(self, cfg: OnChipConfig, region_blocks: int):
+        self.cfg = cfg
+        self.region_blocks = max(region_blocks, 1)
+
+    def translate(self, addr: int, wid: int = 0) -> TranslatedAddr:
+        block = addr // LINE
+        idx = block % self.region_blocks          # direct-mapped block index
+        byte_off = addr % self.cfg.bank_row_bytes                 # F (3b)
+        bank = (addr // self.cfg.bank_row_bytes) % 16             # B (4b)
+        group = idx % 2                                           # G (1b)
+        row = idx // 2                                            # R
+        tag = block // self.region_blocks                         # remainder
+        # tag goes to the opposite bank group; two tags share one bank row,
+        # 32 tags per row of one group. Position derived from the data
+        # block's (F,B) bits, G flipped (Fig. 7c).
+        tag_group = 1 - group
+        tag_bank = idx % 16
+        tag_row = idx // 32
+        return TranslatedAddr(byte_off, bank, group, row, tag,
+                              tag_group, tag_bank, tag_row)
+
+
+class MSHR:
+    def __init__(self, entries: int):
+        self.capacity = entries
+        self.pending: Dict[int, Dict] = {}   # global line addr -> info
+
+    def reserve(self, line_addr: int, smem_addr: Optional[int] = None) -> bool:
+        if line_addr in self.pending:
+            return True
+        if len(self.pending) >= self.capacity:
+            return False
+        self.pending[line_addr] = {"smem_addr": smem_addr}
+        return True
+
+    def fill(self, line_addr: int) -> Optional[Dict]:
+        return self.pending.pop(line_addr, None)
+
+
+class OnChipMemory:
+    """L1D + optional CIAO shared-memory cache region, with VTA feedback."""
+
+    def __init__(self, cfg: OnChipConfig, detector: InterferenceDetector,
+                 smem_used_bytes: int = 0):
+        self.cfg = cfg
+        self.det = detector
+        ns = cfg.num_sets
+        self.tags = [[-1] * cfg.ways for _ in range(ns)]
+        self.owners = [[-1] * cfg.ways for _ in range(ns)]
+        self.reused = [[False] * cfg.ways for _ in range(ns)]
+        self.lru = [[i for i in range(cfg.ways)] for _ in range(ns)]
+        self.smmt = SMMT(cfg.smem_bytes)
+        if smem_used_bytes:
+            self.smmt.allocate("app", smem_used_bytes)
+        base, size = self.smmt.reserve_unused()
+        # tags+data co-resident: each 128B block costs 128B + 4B tag share
+        self.region_blocks = size // (LINE + 4)
+        self.atu = AddressTranslationUnit(cfg, self.region_blocks)
+        self.smem_tags: List[int] = [-1] * max(self.region_blocks, 1)
+        self.smem_owner: List[int] = [-1] * max(self.region_blocks, 1)
+        self.mshr = MSHR(cfg.mshr_entries)
+        self.stats = {"l1_hit": 0, "l1_miss": 0, "smem_hit": 0,
+                      "smem_miss": 0, "smem_migrate": 0, "bypass": 0,
+                      "evictions": 0, "smem_evictions": 0, "vta_hits": 0}
+
+    # ------------------------------------------------------------- L1D path
+    def _set_index(self, line_addr: int) -> int:
+        ns = self.cfg.num_sets
+        idx = line_addr % ns
+        if self.cfg.xor_hash:
+            idx ^= (line_addr // ns) % ns
+        return idx % ns
+
+    def _l1_lookup(self, line_addr: int) -> Tuple[int, Optional[int]]:
+        s = self._set_index(line_addr)
+        for w in range(self.cfg.ways):
+            if self.tags[s][w] == line_addr:
+                return s, w
+        return s, None
+
+    def _l1_touch(self, s: int, w: int) -> None:
+        self.lru[s].remove(w)
+        self.lru[s].append(w)
+
+    def _l1_fill(self, wid: int, line_addr: int) -> None:
+        s = self._set_index(line_addr)
+        victim = self.lru[s][0]
+        old_tag, old_owner = self.tags[s][victim], self.owners[s][victim]
+        if old_tag >= 0:
+            self.stats["evictions"] += 1
+            if self.reused[s][victim] or not self.cfg.reuse_filter:
+                self.det.on_eviction(old_owner, old_tag, wid)
+        self.tags[s][victim] = line_addr
+        self.owners[s][victim] = wid
+        self.reused[s][victim] = False
+        self._l1_touch(s, victim)
+
+    def _l1_invalidate(self, line_addr: int) -> bool:
+        s, w = self._l1_lookup(line_addr)
+        if w is None:
+            return False
+        self.tags[s][w] = -1
+        self.owners[s][w] = -1
+        return True
+
+    # ------------------------------------------------------------ smem path
+    def _smem_access(self, wid: int, line_addr: int) -> str:
+        if self.region_blocks <= 0:
+            return "smem_miss"
+        t = self.atu.translate(line_addr * LINE, wid)
+        assert t.tag_group != t.group  # parallel tag+data access invariant
+        idx = line_addr % self.region_blocks
+        if self.smem_tags[idx] == line_addr:
+            self.stats["smem_hit"] += 1
+            return "smem_hit"
+        # miss: victim tracking in the SAME detector/VTA (§III-C)
+        old = self.smem_tags[idx]
+        if old >= 0:
+            self.stats["smem_evictions"] += 1
+            self.det.on_eviction(self.smem_owner[idx], old, wid)
+        evictor = self.det.on_miss(wid, line_addr)
+        if evictor is not None:
+            self.stats["vta_hits"] += 1
+        # migration: single-copy coherence — if L1D still holds the line,
+        # evict it through the response queue into smem (§IV-B).
+        migrated = self._l1_invalidate(line_addr)
+        self.mshr.reserve(line_addr, smem_addr=idx)
+        self.smem_tags[idx] = line_addr
+        self.smem_owner[idx] = wid
+        self.mshr.fill(line_addr)
+        if migrated:
+            self.stats["smem_migrate"] += 1
+            return "smem_migrate"
+        self.stats["smem_miss"] += 1
+        return "smem_miss"
+
+    # --------------------------------------------------------------- access
+    def access(self, wid: int, addr: int, *, isolated: bool = False,
+               bypass: bool = False, count_instruction: bool = True) -> str:
+        """One memory request. Returns the event kind (simulator adds
+        latency). ``isolated``: CIAO-P redirection to smem. ``bypass``:
+        statPCAL-style L1D bypass."""
+        line_addr = addr // LINE
+        if count_instruction:
+            self.det.on_instruction()
+        if bypass:
+            self.stats["bypass"] += 1
+            return "bypass"
+        if isolated:
+            return self._smem_access(wid, line_addr)
+        s, w = self._l1_lookup(line_addr)
+        if w is not None:
+            self.stats["l1_hit"] += 1
+            self.reused[s][w] = True
+            self._l1_touch(s, w)
+            return "l1_hit"
+        self.stats["l1_miss"] += 1
+        evictor = self.det.on_miss(wid, line_addr)
+        if evictor is not None:
+            self.stats["vta_hits"] += 1
+        self.mshr.reserve(line_addr)
+        self._l1_fill(wid, line_addr)
+        self.mshr.fill(line_addr)
+        return "l1_miss"
+
+    def hit_rate(self) -> float:
+        h = self.stats["l1_hit"] + self.stats["smem_hit"]
+        tot = h + self.stats["l1_miss"] + self.stats["smem_miss"] \
+            + self.stats["smem_migrate"]
+        return h / tot if tot else 0.0

@@ -8,15 +8,6 @@ All policies share the interface the SM simulator drives:
   * ``select(ready)``     — pick the next warp (all use GTO order, §V-A)
   * ``epoch_tick(...)``   — epoch-boundary decisions (Algorithm 1 for CIAO)
 
-The per-warp decisions are additionally materialized as cached NumPy bool
-masks (``allowed_mask`` / ``isolated_mask`` / ``bypass_mask``) so the
-simulator's dispatch loop reads array elements instead of making millions
-of ``allow()`` calls. The masks only change where policy state changes —
-``epoch_tick``, ``on_mem_event``-driven decisions, ``on_warp_done`` — and
-every change bumps ``mask_version`` so the simulator can cache derived
-masks (e.g. allowed & ~done) between changes. The scalar methods stay as
-thin mask reads for external users (serving engine, tests).
-
 CIAO's ``epoch_tick`` is Algorithm 1 with one high-cutoff action per epoch
 (the paper applies one isolate/stall per scheduling event and "repeats this
 step" across epochs) and reverse-order reactivation at low-cutoff epochs
@@ -26,11 +17,9 @@ IRS of the interfered warp recorded in the pair list.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.interference import InterferenceDetector, NO_WARP
+from benchmarks.seed_core.interference import InterferenceDetector, NO_WARP
 
 POLICY_NAMES = ("gto", "ccws", "best-swl", "statpcal",
                 "ciao-p", "ciao-t", "ciao-c")
@@ -43,20 +32,16 @@ class BasePolicy:
         self.n = num_warps
         self.det = detector
         self.last_wid: Optional[int] = None
-        self.allowed_mask = np.ones(num_warps, bool)
-        self.isolated_mask = np.zeros(num_warps, bool)
-        self.bypass_mask = np.zeros(num_warps, bool)
-        self.mask_version = 0
 
     # -- issue control ----------------------------------------------------
     def allow(self, wid: int) -> bool:
-        return bool(self.allowed_mask[wid])
+        return True
 
     def is_isolated(self, wid: int) -> bool:
-        return bool(self.isolated_mask[wid])
+        return False
 
     def is_bypass(self, wid: int) -> bool:
-        return bool(self.bypass_mask[wid])
+        return False
 
     # -- GTO (greedy-then-oldest) selection (shared by all, §V-A) ---------
     def select(self, ready: Sequence[int]) -> int:
@@ -78,7 +63,7 @@ class BasePolicy:
         pass
 
     def num_allowed(self) -> int:
-        return int(self.allowed_mask.sum())
+        return sum(1 for w in range(self.n) if self.allow(w))
 
 
 class GTOPolicy(BasePolicy):
@@ -97,14 +82,9 @@ class BestSWLPolicy(BasePolicy):
         self.limit = max(1, limit)
         self.allowed = set(range(min(self.limit, num_warps)))
         self._next = min(self.limit, num_warps)
-        self._rebuild_masks()
 
-    def _rebuild_masks(self) -> None:
-        m = np.zeros(self.n, bool)
-        if self.allowed:
-            m[list(self.allowed)] = True
-        self.allowed_mask = m
-        self.mask_version += 1
+    def allow(self, wid: int) -> bool:
+        return wid in self.allowed
 
     def on_warp_done(self, wid: int) -> None:
         if wid in self.allowed:
@@ -112,7 +92,6 @@ class BestSWLPolicy(BasePolicy):
             if self._next < self.n:
                 self.allowed.add(self._next)
                 self._next += 1
-            self._rebuild_masks()
 
 
 class CCWSPolicy(BasePolicy):
@@ -128,7 +107,7 @@ class CCWSPolicy(BasePolicy):
     def __init__(self, num_warps, detector, base_score: int = 64,
                  bump: int = 512, budget_per_warp: int = 128):
         super().__init__(num_warps, detector)
-        self.score = np.full(num_warps, base_score, np.int64)
+        self.score = [base_score] * num_warps
         self.base = base_score
         self.bump = bump
         self.budget = budget_per_warp * num_warps
@@ -138,25 +117,21 @@ class CCWSPolicy(BasePolicy):
         if event == "vta_hit":
             self.score[wid] += self.bump
 
+    def allow(self, wid: int) -> bool:
+        return wid not in self.blocked
+
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
         # decay
-        self.score = np.maximum(self.base,
-                                self.score - np.maximum(1, self.score // 8))
-        if active is None:                  # simulator fast path: all warps
-            active = range(len(finished))
-        order = sorted((int(w) for w in active if not finished[w]),
+        self.score = [max(self.base, s - max(1, s // 8)) for s in self.score]
+        order = sorted((w for w in active if not finished[w]),
                        key=lambda w: -self.score[w])
+        total = sum(self.score[w] for w in order)
         self.blocked.clear()
         run_sum = 0
         for w in order:
-            run_sum += int(self.score[w])
+            run_sum += self.score[w]
             if run_sum > self.budget and w != order[0]:
                 self.blocked.add(w)
-        m = np.ones(self.n, bool)
-        if self.blocked:
-            m[list(self.blocked)] = False
-        self.allowed_mask = m
-        self.mask_version += 1
 
 
 class StatPCALPolicy(BestSWLPolicy):
@@ -168,27 +143,18 @@ class StatPCALPolicy(BestSWLPolicy):
 
     def __init__(self, num_warps, detector, limit: int = 48,
                  util_threshold: float = 0.6):
-        self.bypass_active = False
-        self.util_threshold = util_threshold
         super().__init__(num_warps, detector, limit)
+        self.util_threshold = util_threshold
+        self.bypass_active = False
 
-    def _rebuild_masks(self) -> None:
-        m = np.zeros(self.n, bool)
-        if self.allowed:
-            m[list(self.allowed)] = True
-        if self.bypass_active:
-            self.allowed_mask = np.ones(self.n, bool)
-            self.bypass_mask = ~m
-        else:
-            self.allowed_mask = m
-            self.bypass_mask = np.zeros(self.n, bool)
-        self.mask_version += 1
+    def allow(self, wid: int) -> bool:
+        return wid in self.allowed or self.bypass_active
+
+    def is_bypass(self, wid: int) -> bool:
+        return self.bypass_active and wid not in self.allowed
 
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
-        was = self.bypass_active
         self.bypass_active = mem_util < self.util_threshold
-        if self.bypass_active != was:
-            self._rebuild_masks()
 
 
 @dataclasses.dataclass
@@ -198,25 +164,23 @@ class WarpFlags:
 
 
 class CIAOPolicy(BasePolicy):
-    """Algorithm 1. mode: 'p' (isolate only), 't' (throttle only), 'c' (both).
-
-    The per-warp V (active) and I (isolated) bits ARE the cached masks:
-    ``allowed_mask[w]`` is V, ``isolated_mask[w]`` is I. ``flags`` stays
-    available as a read-only snapshot for tools and tests."""
+    """Algorithm 1. mode: 'p' (isolate only), 't' (throttle only), 'c' (both)."""
 
     def __init__(self, num_warps, detector, mode: str = "c"):
         super().__init__(num_warps, detector)
         assert mode in ("p", "t", "c")
         self.mode = mode
         self.name = f"ciao-{mode}"
+        self.flags = [WarpFlags() for _ in range(num_warps)]
         self.stall_stack: List[int] = []      # reverse-order reactivation
         self.isolate_stack: List[int] = []
 
     # -- state queries ------------------------------------------------------
-    @property
-    def flags(self) -> List[WarpFlags]:
-        return [WarpFlags(int(v), int(i)) for v, i
-                in zip(self.allowed_mask, self.isolated_mask)]
+    def allow(self, wid: int) -> bool:
+        return self.flags[wid].v == 1
+
+    def is_isolated(self, wid: int) -> bool:
+        return self.flags[wid].i == 1
 
     # -- Algorithm 1 --------------------------------------------------------
     # IRS decisions use the *high-epoch windowed* snapshot (Eq. 1 over the
@@ -225,21 +189,9 @@ class CIAOPolicy(BasePolicy):
     # high-epoch worth of hysteresis: once an interferer is isolated or
     # stalled, the interfered warp's next window shows the true residual
     # interference and the action is undone if it fell below low-cutoff.
-    # `active` may be None, meaning "all warps 0..len(finished)" — the
-    # simulator's fast path, which skips the fancy-indexing of the general
-    # (subset) form used by direct callers and tests.
-    def _alive_mask(self, active, finished) -> np.ndarray:
-        fin = np.asarray(finished, bool)
-        if active is None:
-            return self.allowed_mask[:len(fin)] & ~fin
-        act = np.asarray(active, np.int64)
-        m = np.zeros(self.n, bool)
-        m[act[self.allowed_mask[act] & ~fin[act]]] = True
-        return m
-
     def _n_active(self, active, finished) -> int:
-        return max(1, int(np.count_nonzero(
-            self._alive_mask(active, finished))))
+        return max(1, sum(1 for w in active
+                          if self.flags[w].v and not finished[w]))
 
     def low_epoch_tick(self, active, finished) -> None:
         # Reactivation uses the *cumulative* IRS of Algorithm 1 verbatim
@@ -256,25 +208,24 @@ class CIAOPolicy(BasePolicy):
             if k == NO_WARP or finished[k] or \
                     self.det.irs(k, n_act) <= cfg.low_cutoff:
                 self.stall_stack.pop()
-                self.allowed_mask[w] = True
-                self.mask_version += 1
+                self.flags[w].v = 1
                 self.det.clear_stall(w)
         # un-redirect isolated warps, newest first (lines 11-19)
         if self.isolate_stack:
             w = self.isolate_stack[-1]
-            if not self.allowed_mask[w]:
+            if self.flags[w].v == 0:
                 return    # stalled while isolated: reactivate first
             k = self.det.isolation_trigger(w)
             if k == NO_WARP or finished[k] or \
                     self.det.irs(k, n_act) <= cfg.low_cutoff:
                 self.isolate_stack.pop()
-                self.isolated_mask[w] = False
-                self.mask_version += 1
+                self.flags[w].i = 0
                 self.det.clear_isolation(w)
 
     def high_epoch_tick(self, active, finished) -> None:
         cfg = self.det.cfg
-        alive = np.flatnonzero(self._alive_mask(active, finished)).tolist()
+        alive = [w for w in active
+                 if self.flags[w].v and not finished[w]]
         if len(alive) <= 1:
             return
         # most-interfered active warp first (lines 20-28; one action/epoch)
@@ -285,21 +236,19 @@ class CIAOPolicy(BasePolicy):
             j = self.det.most_interfering(i)
             if j == NO_WARP or j == i or finished[j]:
                 continue
-            if self.mode in ("p", "c") and not self.isolated_mask[j] \
-                    and self.allowed_mask[j]:
-                self.isolated_mask[j] = True
-                self.mask_version += 1
+            if self.mode in ("p", "c") and self.flags[j].i == 0 \
+                    and self.flags[j].v == 1:
+                self.flags[j].i = 1
                 self.det.record_isolation(j, i)
-                self.isolate_stack.append(int(j))
+                self.isolate_stack.append(j)
                 return
-            if self.mode in ("t", "c") and self.allowed_mask[j] \
-                    and (self.isolated_mask[j] or self.mode == "t"):
+            if self.mode in ("t", "c") and self.flags[j].v == 1 \
+                    and (self.flags[j].i == 1 or self.mode == "t"):
                 if sum(1 for w in alive if w != j) < 1:
                     return
-                self.allowed_mask[j] = False
-                self.mask_version += 1
+                self.flags[j].v = 0
                 self.det.record_stall(j, i)
-                self.stall_stack.append(int(j))
+                self.stall_stack.append(j)
                 return
         return
 
@@ -308,17 +257,16 @@ class CIAOPolicy(BasePolicy):
         effective (shared-memory thrash / reserve-pool defer). Used by the
         serving engine; the SM simulator reaches the same state through
         high_epoch_tick."""
-        if self.mode == "p" or not self.allowed_mask[j]:
+        if self.mode == "p" or self.flags[j].v == 0:
             return False
-        self.allowed_mask[j] = False
-        self.mask_version += 1
+        self.flags[j].v = 0
         self.det.record_stall(j, trigger)
-        self.stall_stack.append(int(j))
+        self.stall_stack.append(j)
         return True
 
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
-        n_active = int(np.count_nonzero(
-            self._alive_mask(active, finished)))
+        n_active = sum(1 for w in active
+                       if self.flags[w].v and not finished[w])
         low, high = self.det.poll_epochs(n_active)
         if low:
             self.low_epoch_tick(active, finished)

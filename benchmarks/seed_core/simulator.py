@@ -1,0 +1,344 @@
+"""Trace-driven SM timing simulator (paper §V-A methodology, Table I).
+
+A single GTX480-like SM: 48 warps, single-issue scheduler, L1D/shared
+memory via :mod:`repro.core.onchip`, and a post-L1 stage — 768KB 8-way
+banked L2 + DRAM bandwidth queueing — modeled by
+:mod:`repro.core.memory`. Memory events map to latencies; blocked warps
+wake on completion; fully-blocked stretches are skipped event-driven so
+long traces stay fast in pure Python.
+
+The post-L1 :class:`~repro.core.memory.MemoryHierarchy` may be private
+(single-SM, the default) or shared between SMs: ``GPUSimulator``
+(:mod:`repro.core.gpu`) passes one instance to every SM and advances them
+in interleaved time slices via the :meth:`SMSimulator.begin` /
+:meth:`SMSimulator.advance` stepping API, so SMs contend on the L2 banks
+and DRAM channels. :meth:`SMSimulator.run` wraps the same API for the
+classic run-to-completion use.
+
+This is deliberately a *relative*-fidelity model: it reproduces the paper's
+scheduler ordering phenomena (cache thrashing under GTO, CCWS' TLP loss on
+compute-intensive codes, CIAO-P's isolation wins on small working sets,
+CIAO-T on large ones, CIAO-C on both) rather than absolute GPU IPC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from benchmarks.seed_core.interference import DetectorConfig, InterferenceDetector
+from benchmarks.seed_core.memory import MemoryHierarchy
+from benchmarks.seed_core.onchip import LINE, OnChipConfig, OnChipMemory
+from benchmarks.seed_core.policies import BasePolicy, make_policy
+
+
+def _default_detector() -> DetectorConfig:
+    # Epochs scaled to our trace lengths (~200K instructions vs the paper's
+    # tens of millions). The paper's own sensitivity sweep (Fig. 11a) shows
+    # <15% IPC change across 1K..50K-instruction epochs; benchmarks sweep
+    # this again (bench_sensitivity).
+    return DetectorConfig(high_epoch=1000, low_epoch=50)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    num_warps: int = 48
+    lat_l1: int = 1
+    lat_smem: int = 1
+    lat_migrate: int = 12         # response-queue round trip (§IV-B)
+    lat_l2: int = 120
+    lat_dram: int = 320
+    dram_gap: int = 8             # cycles/request of DRAM bandwidth/channel
+    dram_channels: int = 1
+    l2_banks: int = 8
+    l2_bank_gap: int = 0          # 0 = unqueued L2 (seed single-SM timing)
+    max_mlp: int = 4              # outstanding memory requests per warp
+    # every 2nd memory op is a dependent use (load-to-use stall): the warp
+    # blocks until that request returns. This is what actually interleaves
+    # warps on a real SM (GTO only switches when the greedy warp stalls).
+    dep_every: int = 2
+    l2_bytes: int = 768 * 1024
+    l2_ways: int = 8
+    max_cycles: int = 20_000_000
+    detector: DetectorConfig = dataclasses.field(default_factory=_default_detector)
+    onchip: OnChipConfig = dataclasses.field(default_factory=OnChipConfig)
+
+    def make_hierarchy(self) -> MemoryHierarchy:
+        return MemoryHierarchy(
+            l2_bytes=self.l2_bytes, l2_ways=self.l2_ways, lat_l2=self.lat_l2,
+            lat_dram=self.lat_dram, dram_gap=self.dram_gap,
+            l2_banks=self.l2_banks, l2_bank_gap=self.l2_bank_gap,
+            dram_channels=self.dram_channels)
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    cycles: int
+    instructions: int
+    ipc: float
+    l1_hit_rate: float
+    vta_hits: int
+    mean_active_warps: float
+    stats: Dict[str, int]
+    timeline: List[Tuple[int, float, int]]  # (cycle, ipc_window, active)
+    # interference pair events (evictor_wid, victim_wid, count), most
+    # frequent first — the Fig. 4 skew data
+    pairs: List[List[int]] = dataclasses.field(default_factory=list)
+
+
+class SMSimulator:
+    """One SM. Either ``run()`` to completion, or step it cooperatively:
+
+        sm.begin()
+        while not sm.finished:
+            sm.advance(until_cycle)     # runs until local cycle >= until
+        result = sm.result()
+    """
+
+    def __init__(self, workload, policy_name: str,
+                 cfg: Optional[SimConfig] = None,
+                 policy_kwargs: Optional[dict] = None,
+                 mem_system: Optional[MemoryHierarchy] = None):
+        """workload: object with .traces (list of (kinds u8, addrs i64)) and
+        .smem_used_bytes (fraction of shared memory the app reserves).
+        ``mem_system``: a shared post-L1 hierarchy; private when None."""
+        self.cfg = cfg = cfg if cfg is not None else SimConfig()
+        self._policy_name = policy_name
+        self._policy_kwargs = policy_kwargs or {}
+        self._smem_used_bytes = workload.smem_used_bytes
+        self._mem_private = mem_system is None
+        self.mem_sys = mem_system if mem_system is not None \
+            else cfg.make_hierarchy()
+        self.traces = workload.traces
+        self.n = min(cfg.num_warps, len(self.traces))
+        self._build_sm_state()
+        self._begun = False
+
+    def _build_sm_state(self) -> None:
+        """Fresh detector + on-chip memory + policy (per-run state)."""
+        cfg = self.cfg
+        self.det = InterferenceDetector(cfg.detector)
+        self.mem = OnChipMemory(cfg.onchip, self.det,
+                                smem_used_bytes=self._smem_used_bytes)
+        self.policy: BasePolicy = make_policy(
+            self._policy_name, cfg.num_warps, self.det,
+            **self._policy_kwargs)
+
+    def _mem_latency(self, wid: int, addr: int) -> int:
+        c = self.cfg
+        isolated = self.policy.is_isolated(wid)
+        bypass = self.policy.is_bypass(wid)
+        event = self.mem.access(wid, addr, isolated=isolated, bypass=bypass)
+        if event == "l1_hit":
+            return c.lat_l1
+        if event == "smem_hit":
+            return c.lat_smem
+        if event == "smem_migrate":
+            return c.lat_migrate
+        # goes to the (possibly shared) L2/DRAM stage
+        lat, level = self.mem_sys.access(addr // LINE, self.cycle)
+        if level == "dram":
+            self.dram_reqs += 1
+        return lat
+
+    # -------------------------------------------------------- stepping API
+    def begin(self) -> None:
+        """Reset run state; must precede ``advance``. Re-running an
+        instance gives identical results: detector, L1/smem, policy, and
+        (when private) the L2/DRAM hierarchy are all rebuilt. A shared
+        hierarchy is left alone — its owner (``GPUSimulator``) resets it
+        once for all SMs."""
+        if self._begun:
+            self._build_sm_state()
+        if self._mem_private:
+            self.mem_sys.reset()
+        n = self.n
+        self.pc = [0] * n
+        self.ready_at = [0] * n
+        self.pending: List[List[int]] = [[] for _ in range(n)]
+        self.mem_ord = [0] * n
+        self.lens = [len(k) for k, _ in self.traces]
+        self.done = [self.lens[w] == 0 for w in range(n)]
+        self.remaining = sum(1 for w in range(n) if not self.done[w])
+        self.instr = 0
+        self.cycle = 0
+        self.dram_reqs = 0
+        self.active_samples: List[int] = []
+        self.timeline: List[Tuple[int, float, int]] = []
+        self._last_instr = 0
+        self._last_cycle = 0
+        self._window_mark = self.timeline_every
+        self._epoch_counter = 0
+        self._all_wids = list(range(n))
+        self._kinds = [np.asarray(k) for k, _ in self.traces]
+        self._addrs = [np.asarray(a) for _, a in self.traces]
+        # next-memory-instruction index, for batching ALU runs
+        self._next_mem = []
+        for k_arr in self._kinds:
+            nm = np.full(len(k_arr) + 1, len(k_arr), np.int64)
+            prev = len(k_arr)
+            for i in range(len(k_arr) - 1, -1, -1):
+                if k_arr[i]:
+                    prev = i
+                nm[i] = prev
+            self._next_mem.append(nm)
+        self._begun = True
+
+    timeline_every: int = 20_000
+
+    @property
+    def finished(self) -> bool:
+        return self._begun and self.remaining == 0
+
+    def advance(self, until: int) -> None:
+        """Advance the SM until its local cycle reaches ``until`` (clamped
+        there when every warp is blocked past the slice boundary, so a
+        co-scheduled SM can interleave) or all warps finish."""
+        c = self.cfg
+        n = self.n
+        until = min(until, c.max_cycles)
+        pc, ready_at, pending = self.pc, self.ready_at, self.pending
+        mem_ord, lens, done = self.mem_ord, self.lens, self.done
+        kinds, addrs, next_mem = self._kinds, self._addrs, self._next_mem
+        low_epoch = c.detector.low_epoch
+        policy = self.policy
+        det = self.det
+
+        while self.remaining and self.cycle < until:
+            # pick a warp: greedy (keep last), else oldest ready & allowed
+            wid = policy.last_wid
+            if wid is None or done[wid] or ready_at[wid] > self.cycle \
+                    or not policy.allow(wid):
+                wid = -1
+                best = None
+                for w in range(n):
+                    if done[w] or not policy.allow(w):
+                        continue
+                    if ready_at[w] <= self.cycle:
+                        wid = w
+                        break
+                    if best is None or ready_at[w] < best:
+                        best = ready_at[w]
+                if wid < 0:
+                    if best is not None:
+                        # event-driven skip, clamped to the slice boundary
+                        self.cycle = min(best, until)
+                    else:
+                        # everything throttled: advance to let epochs fire
+                        self.cycle += low_epoch
+                        det.on_instruction(low_epoch)
+                        policy.epoch_tick(self._all_wids, done,
+                                          self._mem_util())
+                    continue
+                policy.last_wid = wid
+
+            p = pc[wid]
+            if kinds[wid][p]:
+                addr = int(addrs[wid][p])
+                before = det.vta_hit_events
+                lat = self._mem_latency(wid, addr)
+                if det.vta_hit_events > before:
+                    policy.on_mem_event(wid, "vta_hit")
+                mem_ord[wid] += 1
+                done_t = self.cycle + lat
+                if c.dep_every and mem_ord[wid] % c.dep_every == 0:
+                    # dependent use: block until this request returns
+                    ready_at[wid] = done_t
+                else:
+                    # hit-under-miss: keep issuing until max_mlp outstanding
+                    pend = pending[wid]
+                    pend.append(done_t)
+                    if len(pend) > c.max_mlp:
+                        pend[:] = [t for t in pend if t > self.cycle]
+                    outstanding = [t for t in pend if t > self.cycle]
+                    if len(outstanding) >= c.max_mlp:
+                        ready_at[wid] = min(outstanding)
+                    else:
+                        ready_at[wid] = self.cycle + 1
+                adv = 1
+                self.cycle += 1
+            else:
+                # batch the ALU run up to the next memory instruction
+                run_end = int(next_mem[wid][p])
+                adv = run_end - p
+                det.on_instruction(adv)
+                self.cycle += adv
+                ready_at[wid] = self.cycle
+            pc[wid] += adv
+            self.instr += adv
+            if pc[wid] >= lens[wid]:
+                done[wid] = True
+                self.remaining -= 1
+                policy.on_warp_done(wid)
+                if policy.last_wid == wid:
+                    policy.last_wid = None
+
+            new_epoch = det.inst_total // low_epoch
+            if new_epoch != self._epoch_counter:
+                self._epoch_counter = new_epoch
+                policy.epoch_tick(self._all_wids, done, self._mem_util())
+
+            if self.instr >= self._window_mark:
+                act = policy.num_allowed()
+                self.active_samples.append(act)
+                dc = max(self.cycle - self._last_cycle, 1)
+                self.timeline.append(
+                    (self.cycle, (self.instr - self._last_instr) / dc, act))
+                self._last_instr = self.instr
+                self._last_cycle = self.cycle
+                self._window_mark += self.timeline_every
+
+    def result(self) -> SimResult:
+        ipc = self.instr / max(self.cycle, 1)
+        pairs = sorted(([e, w, c] for (e, w), c
+                        in self.det.pair_counts.items()),
+                       key=lambda t: (-t[2], t[0], t[1]))
+        return SimResult(
+            policy=self.policy.name,
+            cycles=self.cycle,
+            instructions=self.instr,
+            ipc=ipc,
+            l1_hit_rate=self.mem.hit_rate(),
+            vta_hits=self.det.vta_hit_events,
+            mean_active_warps=(float(np.mean(self.active_samples))
+                               if self.active_samples else float(self.n)),
+            stats=dict(self.mem.stats, dram_reqs=self.dram_reqs),
+            timeline=list(self.timeline),
+            pairs=pairs,
+        )
+
+    # ------------------------------------------------------- classic entry
+    def run(self, timeline_every: int = 20_000) -> SimResult:
+        self.timeline_every = timeline_every
+        self.begin()
+        self.advance(self.cfg.max_cycles)
+        return self.result()
+
+    def _mem_util(self) -> float:
+        return self.mem_sys.utilization(self.cycle)
+
+
+def run_policy_sweep(workload, policies: Sequence[str],
+                     cfg: Optional[SimConfig] = None,
+                     best_swl_limits: Sequence[int] = (2, 4, 6, 8, 16, 32, 48),
+                     ) -> Dict[str, SimResult]:
+    """Run each policy; Best-SWL/statPCAL get their offline limit sweep
+    (the paper profiles N_wrp per benchmark, Table II)."""
+    cfg = cfg if cfg is not None else SimConfig()
+    out: Dict[str, SimResult] = {}
+    for p in policies:
+        if p in ("best-swl", "statpcal"):
+            best: Optional[SimResult] = None
+            limits = ([workload.n_wrp] if getattr(workload, "n_wrp", 0)
+                      else best_swl_limits)
+            for lim in limits:
+                r = SMSimulator(workload, p, cfg,
+                                policy_kwargs={"limit": lim}).run()
+                if best is None or r.ipc > best.ipc:
+                    best = r
+            out[p] = best
+        else:
+            out[p] = SMSimulator(workload, p, cfg).run()
+    return out

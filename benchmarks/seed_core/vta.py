@@ -1,0 +1,53 @@
+"""Victim Tag Array (paper §II-C, Fig. 3b; Table I: 8 tags/set, 48 sets, FIFO).
+
+Each cache tag carries the WID of the warp that brought the line in. On
+eviction we store (victim address, evictor WID) into the VTA *set of the
+owner warp* (the warp whose data was evicted). When a warp's memory request
+misses L1D but hits its own VTA set, the warp is re-referencing data it
+recently lost — a *VTA hit*, the unit of interference evidence:
+
+  * the stored evictor WID identifies the interfering warp,
+  * the per-warp VTA-hit counter feeds IRS (Eq. 1).
+
+CIAO uses 8 entries/warp — half of CCWS' 16 (paper §V-F).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+class VictimTagArray:
+    def __init__(self, num_sets: int = 48, tags_per_set: int = 8):
+        self.num_sets = num_sets
+        self.tags_per_set = tags_per_set
+        # FIFO per warp: deque of (line_addr, evictor_wid)
+        self.sets: List[Deque[Tuple[int, int]]] = [
+            deque(maxlen=tags_per_set) for _ in range(num_sets)]
+        self.hits = [0] * num_sets          # per-warp VTA-hit counters
+        self.inserts = 0
+
+    def reset_counters(self) -> None:
+        self.hits = [0] * self.num_sets
+
+    def insert(self, owner_wid: int, line_addr: int, evictor_wid: int) -> None:
+        """Record an eviction of ``owner_wid``'s line caused by ``evictor_wid``."""
+        if owner_wid == evictor_wid:
+            return  # self-eviction is capacity pressure, not interference
+        s = self.sets[owner_wid % self.num_sets]
+        s.append((line_addr, evictor_wid))  # deque(maxlen) = FIFO replacement
+        self.inserts += 1
+
+    def probe(self, wid: int, line_addr: int) -> Optional[int]:
+        """On an L1D miss by ``wid``: VTA hit returns the evictor WID that
+        caused the earlier eviction (and pops the entry); miss returns None."""
+        s = self.sets[wid % self.num_sets]
+        for i, (addr, evictor) in enumerate(s):
+            if addr == line_addr:
+                del s[i]
+                self.hits[wid % self.num_sets] += 1
+                return evictor
+        return None
+
+    def hit_count(self, wid: int) -> int:
+        return self.hits[wid % self.num_sets]

@@ -29,6 +29,7 @@ Example::
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import multiprocessing
 import os
@@ -105,10 +106,22 @@ def workload_seed(base_seed: int, workload: str) -> int:
     return zlib.crc32(f"{base_seed}:{workload}".encode()) & 0x7FFFFFFF
 
 
+@functools.lru_cache(maxsize=32)
+def _cached_workload(name: str, seed: int, scale: float):
+    """Per-process workload cache: a grid re-uses one workload across every
+    policy × variant cell (trace generation costs ~100ms per workload and
+    used to be repeated per cell). Safe to share because nothing mutates
+    trace arrays — the simulator compiles its own token streams and the
+    GPU model's address-offset copies allocate fresh arrays. Each spawn
+    worker keeps its own cache; ``pool.map`` chunks cells in grid order, so
+    same-workload cells land contiguously and hit it."""
+    return make_workload(name, seed=seed, scale=scale)
+
+
 def _run_cell(cell: _Cell) -> RunRecord:
-    wl = make_workload(cell.workload, seed=workload_seed(cell.seed,
-                                                         cell.workload),
-                       scale=cell.scale)
+    wl = _cached_workload(cell.workload,
+                          workload_seed(cell.seed, cell.workload),
+                          cell.scale)
     if cell.gpu is not None:
         res = run_gpu_policy_sweep(
             wl, [cell.policy], cfg=cell.cfg, gpu=cell.gpu,

@@ -1,0 +1,86 @@
+"""Regenerate the golden equivalence snapshots (tests/golden/golden_cells.json).
+
+The snapshots pin the *seed* (pre-array-core, PR-1) simulator outputs:
+`test_equivalence.py` asserts the vectorized core reproduces them
+bit-for-bit (ipc, cycles, l1_hit_rate, vta_hits, mean_active_warps,
+stats, timeline, pairs). They were captured by running this script at the
+PR-2 base commit; re-running it on a later tree only confirms
+self-consistency, it does not re-derive the seed baseline.
+
+Usage: PYTHONPATH=src python tests/golden/capture_golden.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.core.gpu import GPUConfig, GPUSimulator
+from repro.core.runner import workload_seed
+from repro.core.simulator import SMSimulator
+from repro.core.traces import make_workload
+
+SCALE = 0.25
+
+# (workload, policy, policy_kwargs) — one cell per workload class and per
+# policy family, plus dedicated cells for the limit-based policies.
+SM_CELLS = [
+    ("bicg", "gto", {}),
+    ("bicg", "ciao-c", {}),
+    ("syrk", "ciao-p", {}),
+    ("syrk", "ccws", {}),
+    ("conv2d", "ciao-t", {}),
+    ("kmn", "statpcal", {"limit": 4}),
+    ("gesummv", "best-swl", {"limit": 2}),
+]
+# one multi-SM chip cell: 2 SMs contending on a shared L2/DRAM stage
+GPU_CELLS = [
+    ("syrk", "ciao-c", 2),
+]
+
+
+def _sim_result_doc(r) -> dict:
+    d = dataclasses.asdict(r)
+    d["timeline"] = [list(t) for t in d["timeline"]]
+    return d
+
+
+def capture() -> dict:
+    cells = []
+    for wl_name, policy, kwargs in SM_CELLS:
+        seed = workload_seed(0, wl_name)
+        wl = make_workload(wl_name, seed=seed, scale=SCALE)
+        r = SMSimulator(wl, policy, policy_kwargs=dict(kwargs)).run()
+        cells.append({
+            "kind": "sm", "workload": wl_name, "policy": policy,
+            "policy_kwargs": kwargs, "seed": seed, "scale": SCALE,
+            "result": _sim_result_doc(r),
+        })
+    for wl_name, policy, num_sms in GPU_CELLS:
+        seed = workload_seed(0, wl_name)
+        wl = make_workload(wl_name, seed=seed, scale=SCALE)
+        g = GPUSimulator(wl, policy, gpu=GPUConfig(num_sms=num_sms)).run()
+        cells.append({
+            "kind": "gpu", "workload": wl_name, "policy": policy,
+            "num_sms": num_sms, "seed": seed, "scale": SCALE,
+            "result": {
+                "policy": g.policy, "num_sms": g.num_sms,
+                "cycles": g.cycles, "instructions": g.instructions,
+                "ipc": g.ipc, "l1_hit_rate": g.l1_hit_rate,
+                "vta_hits": g.vta_hits,
+                "mean_active_warps": g.mean_active_warps,
+                "mem_stats": dict(g.mem_stats),
+                "per_sm": [_sim_result_doc(r) for r in g.per_sm],
+            },
+        })
+    return {"scale": SCALE, "cells": cells}
+
+
+def main() -> None:
+    out = pathlib.Path(__file__).parent / "golden_cells.json"
+    out.write_text(json.dumps(capture(), indent=1, sort_keys=True))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""PR-2 array-core equivalence: the fused hot path must reproduce the
+seed (PR-1) simulator bit-for-bit.
+
+``tests/golden/golden_cells.json`` holds `SimResult` snapshots captured by
+running ``tests/golden/capture_golden.py`` against the seed core at the
+PR-2 base commit (9de8cc9): one cell per workload class (LWS/SWS/CI), one
+per policy family (GTO, CCWS, Best-SWL, statPCAL, CIAO-P/T/C), plus a
+2-SM ``GPUSimulator`` run on a shared L2/DRAM stage. Every numeric field —
+ipc, cycles, l1_hit_rate, stats, the interference pair list, even the
+sampled timeline floats — must match exactly; any divergence in scheduler
+order, LRU victim choice, VTA FIFO semantics, epoch snapshots, or DRAM
+queueing shows up here as a hard failure.
+
+Stats comparison is by golden key: the array core may add new counters
+(e.g. ``mshr_full`` when MSHR gating is enabled), but every seed counter
+must match and no golden key may disappear.
+"""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.core.gpu import GPUConfig, GPUSimulator
+from repro.core.simulator import SMSimulator
+from repro.core.traces import make_workload
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "golden_cells.json"
+
+SIM_FIELDS = ("policy", "cycles", "instructions", "ipc", "l1_hit_rate",
+              "vta_hits", "mean_active_warps", "timeline", "pairs")
+
+
+def _load_cells():
+    doc = json.loads(GOLDEN.read_text())
+    return doc["cells"]
+
+
+def _cell_id(cell):
+    return f"{cell['kind']}-{cell['workload']}-{cell['policy']}"
+
+
+def _assert_sim_result(result, golden):
+    got = dataclasses.asdict(result)
+    got["timeline"] = [list(t) for t in got["timeline"]]
+    for field in SIM_FIELDS:
+        assert got[field] == golden[field], f"mismatch in {field}"
+    for key, val in golden["stats"].items():
+        assert key in got["stats"], f"stat {key!r} disappeared"
+        assert got["stats"][key] == val, f"stat {key!r} mismatch"
+
+
+CELLS = _load_cells()
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=[_cell_id(c) for c in CELLS])
+def test_golden_cell(cell):
+    wl = make_workload(cell["workload"], seed=cell["seed"],
+                       scale=cell["scale"])
+    if cell["kind"] == "sm":
+        result = SMSimulator(wl, cell["policy"],
+                             policy_kwargs=dict(cell["policy_kwargs"])).run()
+        _assert_sim_result(result, cell["result"])
+        return
+    golden = cell["result"]
+    got = GPUSimulator(wl, cell["policy"],
+                       gpu=GPUConfig(num_sms=cell["num_sms"])).run()
+    assert got.policy == golden["policy"]
+    assert got.num_sms == golden["num_sms"]
+    assert got.cycles == golden["cycles"]
+    assert got.instructions == golden["instructions"]
+    assert got.ipc == golden["ipc"]
+    assert got.l1_hit_rate == golden["l1_hit_rate"]
+    assert got.vta_hits == golden["vta_hits"]
+    assert got.mean_active_warps == golden["mean_active_warps"]
+    assert dict(got.mem_stats) == golden["mem_stats"]
+    for sm_result, sm_golden in zip(got.per_sm, golden["per_sm"]):
+        _assert_sim_result(sm_result, sm_golden)
+
+
+def test_rerun_is_deterministic():
+    """`begin()` rebuilds all per-run state: the same instance re-run
+    must reproduce itself exactly (the GPU interleaving relies on it)."""
+    wl = make_workload("syrk", seed=7, scale=0.2)
+    sim = SMSimulator(wl, "ciao-c")
+    a = sim.run()
+    b = sim.run()
+    assert a == b
