@@ -1,0 +1,94 @@
+"""Synthetic vs Pallas-kernel-derived workloads: do the paper's policy
+rankings survive on real kernel access streams?
+
+Sweeps every policy family over one synthetic representative per class
+(LWS ``bicg``, SWS ``syrk``, CI ``conv2d``) *and* the kernel-derived
+traces (``flashattn`` / ``decodeattn`` / ``gather`` — see
+:mod:`repro.workloads.derived`), through the unified runner (one grid,
+multiprocessing fan-out, JSON persistence). Emits per-cell normalized
+IPC (vs GTO), the per-workload policy ranking, per-group geomeans, and
+the Kendall-tau agreement between the synthetic and derived rankings —
+the figure-style answer to "would CIAO's win have shown up if we had
+only evaluated on synthetic streams?".
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import emit
+from repro.core.runner import (ExperimentGrid, geomean, index_records,
+                               run_grid)
+from repro.workloads import workload_names
+
+POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
+            "ciao-c")
+SYNTHETIC = ("bicg", "syrk", "conv2d")
+# bound the Best-SWL/statPCAL offline limit sweep (derived workloads have
+# no Table II N_wrp hint, so each such cell would otherwise run 7 limits)
+LIMITS = (2, 6, 16, 48)
+
+
+def _ranking(rel: Dict[str, float]) -> List[str]:
+    return sorted(rel, key=lambda p: -rel[p])
+
+
+def kendall_tau(a: Sequence[str], b: Sequence[str]) -> float:
+    """Rank-agreement in [-1, 1] between two orderings of one item set."""
+    pos_a = {p: i for i, p in enumerate(a)}
+    pos_b = {p: i for i, p in enumerate(b)}
+    items = list(a)
+    n = len(items)
+    concordant = discordant = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            x = pos_a[items[i]] - pos_a[items[j]]
+            y = pos_b[items[i]] - pos_b[items[j]]
+            if x * y > 0:
+                concordant += 1
+            elif x * y < 0:
+                discordant += 1
+    pairs = n * (n - 1) // 2
+    return (concordant - discordant) / max(pairs, 1)
+
+
+def main(scale: float = 0.5, processes: Optional[int] = None,
+         json_path: Optional[str] = None):
+    derived = tuple(sorted(workload_names("derived")))
+    grid = ExperimentGrid(name="workloads",
+                          workloads=SYNTHETIC + derived,
+                          policies=POLICIES, scale=scale,
+                          best_swl_limits=LIMITS)
+    t0 = time.perf_counter()
+    records = run_grid(grid, processes=processes, json_path=json_path)
+    us_per_cell = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+
+    by = index_records(records)
+    group_rel = {"synthetic": {p: [] for p in POLICIES},
+                 "derived": {p: [] for p in POLICIES}}
+    for name in grid.workloads:
+        group = "derived" if name in derived else "synthetic"
+        gto = by[name, "gto", "base"].ipc
+        rel = {}
+        for p in POLICIES:
+            rel[p] = by[name, p, "base"].ipc / max(gto, 1e-12)
+            group_rel[group][p].append(rel[p])
+            emit(f"workloads/{name}/{p}", us_per_cell, f"{rel[p]:.3f}")
+        emit(f"workloads/{name}/ranking", 0.0, ">".join(_ranking(rel)))
+
+    group_geo = {g: {p: geomean(v[p]) for p in POLICIES}
+                 for g, v in group_rel.items()}
+    for g in ("synthetic", "derived"):
+        for p in POLICIES:
+            emit(f"workloads/geomean_{g}/{p}", 0.0,
+                 f"{group_geo[g][p]:.3f}")
+        emit(f"workloads/ranking_{g}", 0.0,
+             ">".join(_ranking(group_geo[g])))
+    tau = kendall_tau(_ranking(group_geo["synthetic"]),
+                      _ranking(group_geo["derived"]))
+    emit("workloads/rank_agreement_tau", 0.0, f"{tau:.3f}")
+    return {"geomeans": group_geo, "tau": tau}
+
+
+if __name__ == "__main__":
+    main()

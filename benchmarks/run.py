@@ -37,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig4,fig8,fig9,fig10,fig11,fig12,"
-                         "serving,kernels,roofline,perf")
+                         "workloads,serving,kernels,roofline,perf")
     ap.add_argument("--scale", type=float, default=0.5,
                     help="trace-length scale for simulator benches")
     ap.add_argument("--jobs", type=int, default=0,
@@ -86,6 +86,10 @@ def main() -> None:
     if want("fig12"):
         from benchmarks import bench_onchip
         bench_onchip.main()
+    if want("workloads"):
+        from benchmarks import bench_workloads
+        bench_workloads.main(scale=args.scale, processes=jobs,
+                             json_path=str(out / "workloads.json"))
     if want("serving"):
         from benchmarks import bench_serving
         bench_serving.main()

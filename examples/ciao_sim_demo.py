@@ -1,11 +1,14 @@
 """Paper-faithful demo: the SM simulator running all seven schedulers on
 one benchmark per class (LWS / SWS / CI) — the Fig. 8 experiment in
-miniature — followed by a 2-SM chip run where the SMs contend on the
+miniature — followed by the same sweep on traces derived from the repo's
+real Pallas kernels, and a 2-SM chip run where the SMs contend on the
 shared L2/DRAM stage.
 
     PYTHONPATH=src python examples/ciao_sim_demo.py
 """
-from repro.core import make_workload
+import tempfile
+
+from repro.core import load_workload, make_workload, save_workload
 from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import run_policy_sweep
 
@@ -13,19 +16,34 @@ POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
             "ciao-c")
 
 
+def _print_sweep(name: str, klass_label: str, res) -> None:
+    gto = res["gto"].ipc
+    print(f"\n{name} [{klass_label}]  (IPC normalized to GTO, 1 SM)")
+    print(f"{'policy':10s} {'ipc':>6s} {'hit%':>6s} {'active':>7s} "
+          f"{'vta_hits':>9s}")
+    for p in POLICIES:
+        r = res[p]
+        print(f"{p:10s} {r.ipc / gto:6.2f} "
+              f"{100 * r.l1_hit_rate:6.1f} "
+              f"{r.mean_active_warps:7.1f} {r.vta_hits:9d}")
+
+
 def single_sm():
     for name in ("kmn", "syrk", "backprop"):
         wl = make_workload(name, scale=0.5)
-        res = run_policy_sweep(wl, POLICIES)
-        gto = res["gto"].ipc
-        print(f"\n{name} [{wl.klass}]  (IPC normalized to GTO, 1 SM)")
-        print(f"{'policy':10s} {'ipc':>6s} {'hit%':>6s} {'active':>7s} "
-              f"{'vta_hits':>9s}")
-        for p in POLICIES:
-            r = res[p]
-            print(f"{p:10s} {r.ipc / gto:6.2f} "
-                  f"{100 * r.l1_hit_rate:6.1f} "
-                  f"{r.mean_active_warps:7.1f} {r.vta_hits:9d}")
+        _print_sweep(name, wl.klass, run_policy_sweep(wl, POLICIES))
+
+
+def derived_kernels():
+    """Kernel-derived traces (repro.workloads.derived): the flash-attn
+    tiled Q/K/V walk and the gather kernel's index stream, scheduled by
+    the same policies — plus the on-disk npz round trip."""
+    for name in ("flashattn", "gather"):
+        wl = make_workload(name, scale=0.5)
+        with tempfile.TemporaryDirectory() as td:
+            wl = load_workload(save_workload(wl, f"{td}/{name}"))
+        _print_sweep(name, f"{wl.klass}, kernel-derived",
+                     run_policy_sweep(wl, POLICIES))
 
 
 def multi_sm(num_sms: int = 2):
@@ -47,6 +65,7 @@ def multi_sm(num_sms: int = 2):
 
 def main():
     single_sm()
+    derived_kernels()
     multi_sm()
 
 

@@ -14,4 +14,6 @@ from repro.core.gpu import (  # noqa: F401
 from repro.core.runner import (  # noqa: F401
     ExperimentGrid, RunRecord, geomean, index_records, load_records,
     run_grid, save_records)
-from repro.core.traces import make_workload, WORKLOADS  # noqa: F401
+from repro.workloads import (  # noqa: F401
+    WORKLOADS, Workload, load_workload, make_workload, register_workload,
+    save_workload)

@@ -39,7 +39,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import SimConfig, run_policy_sweep
-from repro.core.traces import WORKLOADS, make_workload
+from repro.workloads import WORKLOADS, make_workload
 
 SCHEMA_VERSION = 1
 BASE_VARIANT = "base"

@@ -45,16 +45,18 @@ from repro.core.interference import DetectorConfig, InterferenceDetector
 from repro.core.memory import MemoryHierarchy
 from repro.core.onchip import LINE, OnChipConfig, OnChipMemory
 from repro.core.policies import BasePolicy, make_policy
+from repro.workloads import tokens as _tokens
 
 
 # blocked-warp sentinel for the fused scheduler skip (far above any
 # reachable ready_at but well inside int64)
 _HUGE = 1 << 62
 
-# token -> line-address shift: tokens encode (byte address << 1) | dep, so
-# the line is (tok >> 1) // LINE == tok >> (1 + log2(LINE))
-assert LINE & (LINE - 1) == 0, "LINE must be a power of two"
-_TOK_LINE_SHIFT = 1 + LINE.bit_length() - 1
+# The trace -> token encoding is owned by repro.workloads.tokens (shared
+# with workload persistence); the cache models and the token contract
+# must agree on the line size for the tok -> line shift to hold.
+assert _tokens.LINE == LINE, "workload token contract disagrees on LINE"
+_TOK_LINE_SHIFT = _tokens.TOKEN_LINE_SHIFT
 
 
 def _default_detector() -> DetectorConfig:
@@ -184,40 +186,14 @@ class SMSimulator:
         self._epoch_counter = 0
         self._all_wids = np.arange(n)
         # Each per-warp trace is pre-compiled (vectorized) into a token
-        # stream consumed one token per dispatch: a negative token is a
-        # batched ALU run of -token instructions, a non-negative token is a
-        # memory op encoding (byte address << 1) | dependent-use bit — the
-        # dep_every pattern is baked in so the loop needs no per-op memory
-        # ordinal bookkeeping.
-        dep_every = cfg.dep_every
-        self._ops: List[List[int]] = []
+        # stream consumed one token per dispatch — see
+        # repro.workloads.tokens for the encoding (batched ALU runs as
+        # negative tokens; memory ops carry the dependent-use bit baked in
+        # from the dep_every pattern, so the loop needs no per-op memory
+        # ordinal bookkeeping).
+        self._ops: List[List[int]] = _tokens.encode_workload(
+            self.traces, cfg.dep_every, n)
         self._op_idx = [0] * n
-        self._n_ops = [0] * n
-        for k, a in self.traces[:n]:
-            k_arr = np.asarray(k)
-            a_arr = np.asarray(a, np.int64)
-            length = len(k_arr)
-            midx = np.flatnonzero(k_arr)
-            n_mem = len(midx)
-            if not n_mem:
-                self._ops.append([-length] if length else [])
-                continue
-            # ALU-run length immediately before each memory op
-            gaps = np.diff(np.concatenate(([-1], midx))) - 1
-            mem_toks = a_arr[midx] * 2
-            if dep_every:
-                dep = (np.arange(1, n_mem + 1) % dep_every) == 0
-                mem_toks += dep
-            inter = np.empty(2 * n_mem, np.int64)
-            inter[0::2] = -gaps
-            inter[1::2] = mem_toks
-            keep = np.ones(2 * n_mem, bool)
-            keep[0::2] = gaps > 0
-            toks = inter[keep].tolist()
-            tail = length - (int(midx[-1]) + 1)
-            if tail:
-                toks.append(-tail)
-            self._ops.append(toks)
         self._n_ops = [len(t) for t in self._ops]
         # cached dispatch mask: policy.allowed_mask & ~done, refreshed only
         # after the calls that can change it (epoch_tick / on_warp_done);

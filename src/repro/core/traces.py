@@ -1,230 +1,11 @@
-"""Synthetic workload traces modeled on the paper's benchmark classes
-(Table II: PolyBench / Mars / Rodinia — LWS, SWS, CI).
+"""Back-compat shim: the workload subsystem moved to
+:mod:`repro.workloads` (declarative IR, synthetic families, Pallas-kernel
+-derived traces, token contract, on-disk format).
 
-Each workload is a set of per-warp instruction traces (kind: 0=ALU, 1=MEM
-with a byte address). Classes are parametrized to reproduce the access
-structure the paper attributes to each:
-
-* **LWS** (ATAX, BICG, MVT, KMN, Kmeans): streaming over working sets far
-  larger than L1D with medium-distance re-reference windows, plus a few
-  *irregular* warps hammering a small shared region (the index-array access
-  of SpMV/KMeans, §VI) — the source of the skewed interference of Fig. 4.
-* **SWS** (GESUMMV, SYR2K, SYRK, II, PVC, SS, SM, WC): per-warp working
-  sets of ~1KB with heavy reuse; 48 warps thrash 16KB L1D, but the union
-  fits in L1D + unused shared memory — the CIAO-P sweet spot.
-* **CI** (Gaussian, 2DCONV, CORR, Backprop, Hotspot, NN, NW): mostly ALU,
-  low APKI, with periodic bursts touching a shared table — enough VTA hits
-  to bait locality-aware throttling into sacrificing TLP.
-
-``F_smem`` (fraction of shared memory the app itself uses — Table II) caps
-the space CIAO-P can borrow.
+Everything this module used to define is re-exported so existing imports
+(``from repro.core.traces import make_workload, WORKLOADS, Workload``)
+keep working. New code should import :mod:`repro.workloads` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Dict, List, Tuple
-
-import numpy as np
-
-LINE = 128
-SMEM_TOTAL = 48 * 1024
-
-
-@dataclasses.dataclass
-class Workload:
-    name: str
-    klass: str                     # LWS | SWS | CI
-    traces: List[Tuple[np.ndarray, np.ndarray]]
-    smem_used_bytes: int
-    n_wrp: int = 0                 # profiled Best-SWL limit hint (0 = sweep)
-    apki: float = 0.0
-
-
-def _interleave(n_inst: int, mem_rate: float, addr_stream: np.ndarray,
-                rng) -> Tuple[np.ndarray, np.ndarray]:
-    kinds = (rng.random(n_inst) < mem_rate).astype(np.uint8)
-    n_mem = int(kinds.sum())
-    reps = int(np.ceil(n_mem / max(len(addr_stream), 1)))
-    mem_addrs = np.tile(addr_stream, reps)[:n_mem]
-    addrs = np.zeros(n_inst, np.int64)
-    addrs[kinds == 1] = mem_addrs
-    return kinds, addrs
-
-
-def _reuse_window_stream(base: int, window_bytes: int, passes: int,
-                         total_bytes: int, rng, irregular: bool = False
-                         ) -> np.ndarray:
-    """Slide a re-reference window over a region: each window is swept
-    ``passes`` times line-by-line before sliding (potential locality that
-    interference destroys)."""
-    lines_per_window = max(window_bytes // LINE, 1)
-    n_windows = max(total_bytes // window_bytes, 1)
-    out = []
-    for wdx in range(n_windows):
-        wbase = base + wdx * window_bytes
-        lines = wbase + LINE * np.arange(lines_per_window)
-        if irregular:
-            lines = rng.permutation(lines)
-        for _ in range(passes):
-            out.append(lines)
-    return np.concatenate(out) if out else np.zeros(1, np.int64)
-
-
-def lws_workload(name: str, *, num_warps=48, inst_per_warp=4000,
-                 mem_rate=0.35, heavy_warps=8, heavy_mem_rate=0.70,
-                 hot_lines_per_warp=2, hot_rate=0.45,
-                 smem_frac=0.0, n_wrp=0, seed=0) -> Workload:
-    """Every warp streams a large region (no reuse — pure eviction pressure)
-    and re-references a few private hot lines (stencil edges / accumulators /
-    index-array entries). A few *heavy* warps stream at ~2x the memory rate
-    with no hot reuse of their own — the severe, non-uniform interferers of
-    Fig. 4: they evict everyone's hot lines, earn the interference-list
-    blame, and are the right warps to isolate (CIAO-P) or stall (CIAO-T)."""
-    rng = np.random.default_rng(seed)
-    traces = []
-    stride = max(1, num_warps // max(heavy_warps, 1))
-    heavy_set = set(range(1, num_warps, stride))  # spread across WIDs
-    heavy_set = set(list(heavy_set)[:heavy_warps])
-    for w in range(num_warps):
-        heavy = w in heavy_set
-        rate = heavy_mem_rate if heavy else mem_rate
-        kinds = (rng.random(inst_per_warp) < rate).astype(np.uint8)
-        n_mem = int(kinds.sum())
-        base = (w + 1) * 16 * 1024 * 1024
-        hot = base + LINE * np.arange(hot_lines_per_warp)
-        stream_lines = base + 4 * 1024 * 1024 + LINE * np.arange(n_mem)
-        use_hot = rng.random(n_mem) < (0.02 if heavy else hot_rate)
-        hot_seq = hot[np.arange(n_mem) % hot_lines_per_warp]
-        mem_addrs = np.where(use_hot, hot_seq, stream_lines)
-        addrs = np.zeros(inst_per_warp, np.int64)
-        addrs[kinds == 1] = mem_addrs
-        traces.append((kinds, addrs))
-    return Workload(name, "LWS", traces,
-                    int(smem_frac * SMEM_TOTAL), n_wrp,
-                    apki=mem_rate * 1000)
-
-
-def sws_workload(name: str, *, num_warps=48, inst_per_warp=4000,
-                 mem_rate=0.35, ws_per_warp=1024, passes=64,
-                 smem_frac=0.0, n_wrp=0, seed=0) -> Workload:
-    rng = np.random.default_rng(seed)
-    traces = []
-    for w in range(num_warps):
-        base = (w + 1) * 4 * 1024 * 1024
-        stream = _reuse_window_stream(base, ws_per_warp, passes,
-                                      ws_per_warp, rng)
-        traces.append(_interleave(inst_per_warp, mem_rate, stream, rng))
-    return Workload(name, "SWS", traces,
-                    int(smem_frac * SMEM_TOTAL), n_wrp,
-                    apki=mem_rate * 1000)
-
-
-def ci_workload(name: str, *, num_warps=48, inst_per_warp=4000,
-                mem_rate=0.05, hot_lines_per_warp=2, hot_rate=0.5,
-                shared_bytes=24 * 1024, smem_frac=0.0, n_wrp=0,
-                seed=0) -> Workload:
-    """Compute-intensive: ~95% ALU, but the few memory ops mix per-warp hot
-    lines (frequent re-reference -> VTA hits when evicted) with a shared
-    table larger than L1D (eviction pressure). The VTA hits bait CCWS into
-    score-based throttling — a pure TLP loss on compute-bound code — while
-    the *absolute* hit rate stays far below CIAO's IRS high-cutoff (Eq. 1
-    normalizes by instructions), so CIAO leaves TLP alone. This is exactly
-    the Backprop asymmetry of Fig. 1/9."""
-    rng = np.random.default_rng(seed)
-    traces = []
-    shared_lines = LINE * np.arange(max(shared_bytes // LINE, 1))
-    for w in range(num_warps):
-        kinds = (rng.random(inst_per_warp) < mem_rate).astype(np.uint8)
-        n_mem = int(kinds.sum())
-        base = (w + 1) * 4 * 1024 * 1024
-        hot = base + LINE * np.arange(hot_lines_per_warp)
-        hot_seq = hot[np.arange(n_mem) % hot_lines_per_warp]
-        sh = np.tile(shared_lines, int(np.ceil(
-            n_mem / len(shared_lines))))[:n_mem]
-        use_hot = rng.random(n_mem) < hot_rate
-        mem_addrs = np.where(use_hot, hot_seq, sh)
-        addrs = np.zeros(inst_per_warp, np.int64)
-        addrs[kinds == 1] = mem_addrs
-        traces.append((kinds, addrs))
-    return Workload(name, "CI", traces,
-                    int(smem_frac * SMEM_TOTAL), n_wrp,
-                    apki=mem_rate * 1000)
-
-
-def two_phase_workload(name: str, *, seed=0) -> Workload:
-    """ATAX-like: memory-intensive phase then compute-intensive phase
-    (Fig. 9) within one kernel."""
-    a = lws_workload("phase1", inst_per_warp=2500, heavy_warps=6,
-                     mem_rate=0.45, seed=seed)
-    b = ci_workload("phase2", inst_per_warp=2500, mem_rate=0.05,
-                    seed=seed + 1)
-    traces = []
-    for (k1, a1), (k2, a2) in zip(a.traces, b.traces):
-        traces.append((np.concatenate([k1, k2]), np.concatenate([a1, a2])))
-    return Workload(name, "LWS", traces, 0, 0, apki=250)
-
-
-# --------------------------------------------------------------- registry
-def make_workload(name: str, seed: int = 0, scale: float = 1.0) -> Workload:
-    n = lambda x: int(x * scale)
-    table = {
-        # --- LWS (Table II: ATAX/BICG/MVT N_wrp=2, KMN=4, Kmeans=2) ---
-        "atax": lambda: two_phase_workload("atax", seed=seed),
-        "bicg": lambda: lws_workload("bicg", inst_per_warp=n(4000),
-                                     heavy_warps=6, n_wrp=2, seed=seed),
-        "mvt": lambda: lws_workload("mvt", inst_per_warp=n(4000),
-                                    heavy_warps=4, hot_rate=0.35, n_wrp=2,
-                                    seed=seed + 2),
-        "kmn": lambda: lws_workload("kmn", inst_per_warp=n(4000),
-                                    mem_rate=0.40, heavy_warps=10,
-                                    smem_frac=0.01, n_wrp=4, seed=seed + 3),
-        "kmeans": lambda: lws_workload("kmeans", inst_per_warp=n(5000),
-                                       mem_rate=0.45, heavy_warps=8,
-                                       heavy_mem_rate=0.8, n_wrp=2,
-                                       seed=seed + 4),
-        # --- SWS (GESUMMV/SYR2K/SYRK N_wrp=2/6/6; PVC/SS use smem) ---
-        "gesummv": lambda: sws_workload("gesummv", inst_per_warp=n(4000),
-                                        mem_rate=0.5, ws_per_warp=1024,
-                                        n_wrp=2, seed=seed + 5),
-        "syr2k": lambda: sws_workload("syr2k", inst_per_warp=n(4000),
-                                      ws_per_warp=1024, n_wrp=6,
-                                      seed=seed + 6),
-        "syrk": lambda: sws_workload("syrk", inst_per_warp=n(4000),
-                                     ws_per_warp=768, n_wrp=6, seed=seed + 7),
-        "ii": lambda: sws_workload("ii", inst_per_warp=n(4000), mem_rate=0.3,
-                                   ws_per_warp=1280, n_wrp=4, seed=seed + 8),
-        "pvc": lambda: sws_workload("pvc", inst_per_warp=n(4000),
-                                    ws_per_warp=896, smem_frac=0.33,
-                                    n_wrp=48, seed=seed + 9),
-        "ss": lambda: sws_workload("ss", inst_per_warp=n(4000),
-                                   ws_per_warp=896, smem_frac=0.50, n_wrp=48,
-                                   seed=seed + 10),
-        # --- CI (Backprop smem 13%, Hotspot 19%, NW 35%) ---
-        "gaussian": lambda: ci_workload("gaussian", inst_per_warp=n(4000),
-                                        mem_rate=0.05, n_wrp=48,
-                                        seed=seed + 11),
-        "conv2d": lambda: ci_workload("conv2d", inst_per_warp=n(4000),
-                                      mem_rate=0.03, n_wrp=36,
-                                      seed=seed + 12),
-        "backprop": lambda: ci_workload("backprop", inst_per_warp=n(4000),
-                                        mem_rate=0.08, hot_rate=0.6,
-                                        smem_frac=0.13, n_wrp=36,
-                                        seed=seed + 13),
-        "hotspot": lambda: ci_workload("hotspot", inst_per_warp=n(4000),
-                                       mem_rate=0.02, smem_frac=0.19,
-                                       n_wrp=48, seed=seed + 14),
-        "nw": lambda: ci_workload("nw", inst_per_warp=n(4000), mem_rate=0.05,
-                                  hot_rate=0.4, smem_frac=0.35, n_wrp=48,
-                                  seed=seed + 15),
-    }
-    return table[name]()
-
-
-WORKLOADS: Dict[str, str] = {
-    "atax": "LWS", "bicg": "LWS", "mvt": "LWS", "kmn": "LWS",
-    "kmeans": "LWS",
-    "gesummv": "SWS", "syr2k": "SWS", "syrk": "SWS", "ii": "SWS",
-    "pvc": "SWS", "ss": "SWS",
-    "gaussian": "CI", "conv2d": "CI", "backprop": "CI", "hotspot": "CI",
-    "nw": "CI",
-}
+from repro.workloads import (  # noqa: F401
+    LINE, SMEM_TOTAL, WORKLOADS, Workload, ci_workload, lws_workload,
+    make_workload, register_workload, sws_workload, two_phase_workload)

@@ -1,0 +1,36 @@
+"""Workload subsystem: declarative access-pattern IR, synthetic benchmark
+families, Pallas-kernel-derived traces, token compilation, and a
+versioned on-disk format.
+
+Entry points:
+
+* :func:`make_workload` / :data:`WORKLOADS` / :data:`REGISTRY` — the
+  registry (``repro.core.traces`` re-exports these for back-compat).
+* :mod:`repro.workloads.ir` — primitives + :func:`compile_workload`.
+* :mod:`repro.workloads.tokens` — the trace -> token-stream contract the
+  simulator consumes.
+* :mod:`repro.workloads.io` — :func:`save_workload` /
+  :func:`load_workload` (npz + JSON header, format-versioned).
+* :mod:`repro.workloads.derived` — traces walked out of the repo's real
+  Pallas kernels (flashattn / decodeattn / gather), registered alongside
+  the synthetic families.
+"""
+from repro.workloads.ir import (  # noqa: F401
+    AluBurst, Explicit, HotLines, Interleave, MemBurst, Mix, PhaseSpec,
+    ReuseWindow, SharedTable, SMEM_TOTAL, Stream, Workload, WorkloadSpec,
+    compile_workload)
+from repro.workloads.tokens import (  # noqa: F401
+    LINE, TOKEN_LINE_SHIFT, decode_trace, encode_trace, encode_workload,
+    token_line)
+from repro.workloads.registry import (  # noqa: F401
+    REGISTRY, WORKLOADS, WorkloadEntry, make_workload, register_workload,
+    workload_names)
+from repro.workloads.synthetic import (  # noqa: F401
+    ci_spec, ci_workload, lws_spec, lws_workload, sws_spec, sws_workload,
+    two_phase_spec, two_phase_workload)
+from repro.workloads import derived as _derived  # noqa: F401  (registers)
+from repro.workloads.derived import (  # noqa: F401
+    decodeattn_workload, flashattn_workload, gather_index_stream,
+    gather_workload)
+from repro.workloads.io import (  # noqa: F401
+    FORMAT_VERSION, load_workload, save_workload)

@@ -1,0 +1,71 @@
+"""Versioned on-disk workload format: one ``.npz`` with a JSON header.
+
+Layout (format version 1):
+
+* ``header`` — a JSON string array: ``format`` (int version), ``name``,
+  ``klass``, ``smem_used_bytes``, ``n_wrp``, ``apki``, ``num_warps``,
+  ``line`` (the cache-line size the addresses assume).
+* ``kinds_<i>`` / ``addrs_<i>`` — per-warp trace arrays (uint8 / int64),
+  compressed.
+
+``load_workload`` refuses files written with an unknown format version or
+a mismatched line size (addresses are line-aligned byte addresses — a
+different ``LINE`` would silently re-shape every cache set index). The
+round-trip is exact: ``load_workload(save_workload(wl))`` tokenizes
+identically to ``wl`` (property-tested in ``tests/test_workloads.py``).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Union
+
+import numpy as np
+
+from repro.workloads.ir import Workload
+from repro.workloads.tokens import LINE
+
+FORMAT_VERSION = 1
+
+
+def save_workload(wl: Workload, path: Union[str, pathlib.Path]) -> str:
+    """Write ``wl`` to ``path`` (``.npz`` appended if missing)."""
+    p = pathlib.Path(path)
+    header = {
+        "format": FORMAT_VERSION,
+        "name": wl.name,
+        "klass": wl.klass,
+        "smem_used_bytes": int(wl.smem_used_bytes),
+        "n_wrp": int(wl.n_wrp),
+        "apki": float(wl.apki),
+        "num_warps": len(wl.traces),
+        "line": LINE,
+    }
+    arrays = {"header": np.array(json.dumps(header, sort_keys=True))}
+    for i, (kinds, addrs) in enumerate(wl.traces):
+        arrays[f"kinds_{i}"] = np.asarray(kinds, np.uint8)
+        arrays[f"addrs_{i}"] = np.asarray(addrs, np.int64)
+    target = p if p.suffix == ".npz" else pathlib.Path(str(p) + ".npz")
+    target.parent.mkdir(parents=True, exist_ok=True)
+    with open(target, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+    return str(target)
+
+
+def load_workload(path: Union[str, pathlib.Path]) -> Workload:
+    with np.load(pathlib.Path(path), allow_pickle=False) as npz:
+        header = json.loads(str(npz["header"]))
+        fmt = header.get("format")
+        if fmt != FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported workload format {fmt!r} in {path} "
+                f"(this build reads version {FORMAT_VERSION})")
+        if header.get("line", LINE) != LINE:
+            raise ValueError(
+                f"workload {path} was captured with line size "
+                f"{header['line']}, this build uses {LINE}")
+        traces = [(npz[f"kinds_{i}"], npz[f"addrs_{i}"])
+                  for i in range(header["num_warps"])]
+    return Workload(header["name"], header["klass"], traces,
+                    header["smem_used_bytes"], header["n_wrp"],
+                    header["apki"])

@@ -12,6 +12,7 @@ Usage: PYTHONPATH=src python tests/golden/capture_golden.py
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import json
 import pathlib
 
@@ -77,8 +78,10 @@ def capture() -> dict:
 
 
 def main() -> None:
-    out = pathlib.Path(__file__).parent / "golden_cells.json"
-    out.write_text(json.dumps(capture(), indent=1, sort_keys=True))
+    out = pathlib.Path(__file__).parent / "golden_cells.json.gz"
+    payload = json.dumps(capture(), indent=1, sort_keys=True).encode()
+    # mtime=0 so re-captures of identical results are byte-identical
+    out.write_bytes(gzip.compress(payload, 9, mtime=0))
     print(f"wrote {out}")
 
 

@@ -1,7 +1,7 @@
 """PR-2 array-core equivalence: the fused hot path must reproduce the
 seed (PR-1) simulator bit-for-bit.
 
-``tests/golden/golden_cells.json`` holds `SimResult` snapshots captured by
+``tests/golden/golden_cells.json.gz`` holds `SimResult` snapshots captured by
 running ``tests/golden/capture_golden.py`` against the seed core at the
 PR-2 base commit (9de8cc9): one cell per workload class (LWS/SWS/CI), one
 per policy family (GTO, CCWS, Best-SWL, statPCAL, CIAO-P/T/C), plus a
@@ -16,6 +16,7 @@ Stats comparison is by golden key: the array core may add new counters
 must match and no golden key may disappear.
 """
 import dataclasses
+import gzip
 import json
 import pathlib
 
@@ -25,6 +26,8 @@ from repro.core.gpu import GPUConfig, GPUSimulator
 from repro.core.simulator import SMSimulator
 from repro.core.traces import make_workload
 
+# stored gzipped (the raw JSON is ~850KB of timeline floats); the .gz
+# takes precedence — a plain .json is read only when no .gz exists
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "golden_cells.json"
 
 SIM_FIELDS = ("policy", "cycles", "instructions", "ipc", "l1_hit_rate",
@@ -32,7 +35,11 @@ SIM_FIELDS = ("policy", "cycles", "instructions", "ipc", "l1_hit_rate",
 
 
 def _load_cells():
-    doc = json.loads(GOLDEN.read_text())
+    gz = GOLDEN.with_suffix(".json.gz")
+    if gz.exists():
+        doc = json.loads(gzip.decompress(gz.read_bytes()).decode())
+    else:
+        doc = json.loads(GOLDEN.read_text())
     return doc["cells"]
 
 
