@@ -1,0 +1,197 @@
+"""PR-4 grid-throughput harness: batched lockstep engine vs the PR-2
+spawn-pool path, written to ``BENCH_PR4.json`` at the repo root.
+
+Measures end-to-end ``run_grid`` wall time on the single-SM fig8 grid
+(the paper's Fig. 8 policy × workload sweep) three ways, interleaved
+best-of-N in one process (the container's absolute speed drifts ~2x
+between sessions, so only same-run ratios are meaningful):
+
+* ``pool``          — ``engine="process"`` at ``--jobs`` workers (the
+                      PR-2 spawn-pool fan-out; default 2, the dev box's
+                      core count),
+* ``batched``       — ``engine="batched"`` with the auto backend (the C
+                      stepper when a compiler is available),
+* ``batched_numpy`` — the same engine forced onto the pure-numpy
+                      lockstep stepper (the portable fallback).
+
+Every engine's records are asserted **equal** before any time is
+reported — the speedup is meaningless unless the grids agree cell for
+cell. The headline ratio is pool wall time / batched wall time, i.e.
+grid-sweep throughput in cells/sec.
+
+Usage::
+
+    python -m benchmarks.bench_batched [--quick] [--repeats N]
+                                       [--scale S] [--jobs N]
+                                       [--out BENCH_PR4.json]
+                                       [--floor-ratio R]
+
+``--floor-ratio R`` exits nonzero if the batched/pool throughput ratio
+falls below R — the CI guard against regressing the batched engine. A
+ratio, not an absolute rate, so noisy runners do not flap the job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import time
+from typing import Dict, List
+
+from benchmarks.common import emit, header
+
+SCHEMA_VERSION = 1
+
+FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
+            "syrk", "gesummv", "syr2k", "ii",          # SWS
+            "backprop", "conv2d", "gaussian", "nw")    # CI
+QUICK_SET = ("kmn", "bicg", "syrk", "gesummv", "conv2d", "nw")
+POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
+            "ciao-c")
+
+
+def _grid(quick: bool, scale: float):
+    from repro.core.runner import ExperimentGrid
+    return ExperimentGrid(name="fig8", policies=POLICIES, scale=scale,
+                          workloads=QUICK_SET if quick else FULL_SET)
+
+
+def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
+    from repro.core.runner import run_grid
+    prev = os.environ.get("REPRO_BATCHED_BACKEND")
+    if backend:
+        os.environ["REPRO_BATCHED_BACKEND"] = backend
+    try:
+        t0 = time.perf_counter()
+        records = run_grid(grid, processes=jobs, engine=engine)
+        wall = time.perf_counter() - t0
+    finally:
+        if backend:
+            if prev is None:
+                os.environ.pop("REPRO_BATCHED_BACKEND", None)
+            else:
+                os.environ["REPRO_BATCHED_BACKEND"] = prev
+    return {"wall_s": wall, "records": records}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid/scale for the CI perf smoke")
+    ap.add_argument("--repeats", type=int, default=0,
+                    help="interleaved A/B repeats (default 2, quick 1)")
+    ap.add_argument("--scale", type=float, default=0.0,
+                    help="trace scale (default 0.5, quick 0.2)")
+    ap.add_argument("--jobs", type=int, default=2,
+                    help="spawn-pool workers for the baseline")
+    ap.add_argument("--out", default="BENCH_PR4.json")
+    ap.add_argument("--floor-ratio", type=float, default=0.0,
+                    help="fail if batched/pool throughput ratio is below")
+    ap.add_argument("--skip-numpy", action="store_true",
+                    help="skip the pure-numpy stepper measurement")
+    args = ap.parse_args()
+    repeats = args.repeats or (1 if args.quick else 2)
+    scale = args.scale or (0.2 if args.quick else 0.5)
+
+    from repro.core import _cstep
+    from repro.core.runner import _cached_workload, expand_grid, \
+        workload_seed
+
+    header()
+    grid = _grid(args.quick, scale)
+    cells = expand_grid(grid)
+    n_cells = len(cells)
+
+    # untimed warm-up: generate/cache every workload and compile the C
+    # stepper now, so neither one-time cost lands inside either timed
+    # window (a cold cache would otherwise bias the first engine timed)
+    batch_size = 0
+    for cell in cells:
+        wl = _cached_workload(cell.workload,
+                              workload_seed(cell.seed, cell.workload),
+                              cell.scale)
+        if cell.policy in ("best-swl", "statpcal") and \
+                not getattr(wl, "n_wrp", 0):
+            batch_size += len(cell.best_swl_limits)
+        else:
+            batch_size += 1     # n_wrp pins the sweep to one limit
+    _cstep.available()
+
+    walls: Dict[str, List[float]] = {"pool": [], "batched": [],
+                                     "batched_numpy": []}
+    ref_records = None
+    for _ in range(repeats):
+        runs = [("batched", "batched", args.jobs, "auto"),
+                ("pool", "process", args.jobs, "")]
+        if not args.skip_numpy:
+            runs.append(("batched_numpy", "batched", args.jobs, "numpy"))
+        for name, engine, jobs, backend in runs:
+            r = _time_engine(grid, engine, jobs, backend)
+            walls[name].append(r["wall_s"])
+            if ref_records is None:
+                ref_records = r["records"]
+            elif r["records"] != ref_records:
+                raise RuntimeError(
+                    f"engine {name!r} records diverge from the pool path "
+                    "— bit-exactness broken, timings are meaningless")
+
+    doc: Dict = {
+        "schema": SCHEMA_VERSION,
+        "unix_time": int(time.time()),
+        "machine": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "cpus": os.cpu_count()},
+        "config": {"quick": args.quick, "repeats": repeats,
+                   "scale": scale, "jobs": args.jobs,
+                   "grid": "fig8", "workloads": list(grid.workloads),
+                   "policies": list(POLICIES)},
+        "grid_cells": n_cells,
+        # lockstep batch width after Best-SWL/statPCAL limit-sweep
+        # flattening (this single-SM, single-config grid fits one chunk)
+        "batch_size": batch_size,
+        "c_stepper": {"available": _cstep.available(),
+                      "detail": _cstep.unavailable_reason()},
+        "results": {},
+    }
+    for name, ws in walls.items():
+        if not ws:
+            continue
+        best = min(ws)
+        doc["results"][name] = {
+            "wall_s": best, "cells_per_s": n_cells / best,
+            "all_walls_s": ws,
+        }
+        emit(f"batched/{name}", 0.0,
+             f"{n_cells / best:.2f}cells/s;wall={best:.2f}s")
+
+    ratio = doc["results"]["pool"]["wall_s"] / \
+        doc["results"]["batched"]["wall_s"]
+    np_r = doc["results"].get("batched_numpy")
+    doc["headline"] = {
+        "ratio_vs_pool": ratio,
+        "numpy_ratio_vs_pool": (doc["results"]["pool"]["wall_s"]
+                                / np_r["wall_s"]) if np_r else None,
+        "note": "ratio = best-of-N interleaved pool/batched wall time on "
+                "the same grid, records asserted equal; absolute "
+                "cells/sec drifts with the container",
+    }
+    emit("batched/ratio", 0.0, f"{ratio:.2f}x")
+
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    emit("batched/json", 0.0, str(out))
+
+    if args.floor_ratio and ratio < args.floor_ratio:
+        print(f"# FAIL: batched/pool ratio {ratio:.2f}x below floor "
+              f"{args.floor_ratio:.2f}x")
+        return 1
+    if args.floor_ratio:
+        emit("batched/floor", 0.0,
+             f"ok:{ratio:.2f}x>={args.floor_ratio:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

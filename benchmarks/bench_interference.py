@@ -13,10 +13,11 @@ from repro.core.runner import ExperimentGrid, run_grid
 
 
 def main(processes: Optional[int] = None,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None, engine: str = "auto"):
     records = run_grid(ExperimentGrid(name="fig4", workloads=("kmn",),
                                       policies=("gto",)),
-                       processes=processes, json_path=json_path)
+                       processes=processes, json_path=json_path,
+                       engine=engine)
     pairs = records[0].pairs            # [evictor, victim, count] desc
     if not pairs:
         emit("fig4/interference_pairs", 0.0, "none")

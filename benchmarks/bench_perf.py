@@ -1,5 +1,7 @@
 """PR-2 perf-tracking harness: instr/s per component + full-run A/B vs the
-vendored seed core, written to ``BENCH_PR2.json`` at the repo root.
+vendored seed core, written to ``BENCH_PR2.json`` at the repo root
+(``BENCH_PR2.quick.json`` under ``--quick``, so the CI smoke never
+clobbers a full local measurement).
 
 Measures the live ``repro.core`` simulator against ``benchmarks.seed_core``
 (the PR-1 core frozen at commit 9de8cc9) *in one process, interleaved*:
@@ -189,8 +191,10 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.0,
                     help="trace scale for full runs (default 1.0, "
                          "quick 0.25)")
-    ap.add_argument("--out", default="BENCH_PR2.json",
-                    help="output JSON path (repo-root relative)")
+    ap.add_argument("--out", default="",
+                    help="output JSON path (default BENCH_PR2.json, or "
+                         "BENCH_PR2.quick.json under --quick so a CI "
+                         "smoke run cannot clobber a full measurement)")
     ap.add_argument("--floor-ratio", type=float, default=0.0,
                     help="fail if bicg/ciao-c speedup over the seed core "
                          "is below this ratio")
@@ -254,7 +258,8 @@ def main() -> int:
                 "so cross-run instr/s comparisons are not meaningful",
     }
 
-    out = pathlib.Path(args.out)
+    out = pathlib.Path(args.out or ("BENCH_PR2.quick.json" if args.quick
+                                    else "BENCH_PR2.json"))
     out.write_text(json.dumps(doc, indent=1, sort_keys=True))
     emit("perf/json", 0.0, str(out))
 

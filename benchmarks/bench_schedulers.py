@@ -21,11 +21,12 @@ BENCH_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
 
 
 def main(scale: float = 0.5, processes: Optional[int] = None,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None, engine: str = "auto"):
     grid = ExperimentGrid(name="fig8", workloads=BENCH_SET,
                           policies=POLICIES, scale=scale)
     t0 = time.perf_counter()
-    records = run_grid(grid, processes=processes, json_path=json_path)
+    records = run_grid(grid, processes=processes, json_path=json_path,
+                       engine=engine)
     us_per_cell = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
 
     by = index_records(records)

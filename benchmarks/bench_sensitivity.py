@@ -14,7 +14,7 @@ from repro.core.simulator import SimConfig
 
 
 def main(processes: Optional[int] = None,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None, engine: str = "auto"):
     variants = {}
     # epoch sweep (paper: 1K..50K within 15%)
     for epoch in (250, 500, 1000, 2500, 5000):
@@ -29,11 +29,12 @@ def main(processes: Optional[int] = None,
 
     base = run_grid(ExperimentGrid(name="fig11-base", workloads=("syrk",),
                                    policies=("gto",)),
-                    processes=processes)[0].ipc
+                    processes=processes, engine=engine)[0].ipc
     records = run_grid(ExperimentGrid(name="fig11", workloads=("syrk",),
                                       policies=("ciao-c",),
                                       variants=variants),
-                       processes=processes, json_path=json_path)
+                       processes=processes, json_path=json_path,
+                       engine=engine)
     for r in records:
         emit(r.variant, 0.0, f"{r.ipc / base:.3f}")
 

@@ -2,14 +2,17 @@
 rankings survive on real kernel access streams?
 
 Sweeps every policy family over one synthetic representative per class
-(LWS ``bicg``, SWS ``syrk``, CI ``conv2d``) *and* the kernel-derived
-traces (``flashattn`` / ``decodeattn`` / ``gather`` — see
-:mod:`repro.workloads.derived`), through the unified runner (one grid,
-multiprocessing fan-out, JSON persistence). Emits per-cell normalized
-IPC (vs GTO), the per-workload policy ranking, per-group geomeans, and
-the Kendall-tau agreement between the synthetic and derived rankings —
-the figure-style answer to "would CIAO's win have shown up if we had
-only evaluated on synthetic streams?".
+(LWS ``bicg``, SWS ``syrk``, CI ``conv2d``), the kernel-derived traces
+(``flashattn`` / ``decodeattn`` / ``gather`` — see
+:mod:`repro.workloads.derived`), *and* their arrival-jittered twins
+(``*-jit``: same walks with per-warp start skew, probing whether the
+PR-3 ranking gap comes from lockstep warp arrival capping MLP), through
+the unified runner (one grid, batched/pool fan-out, JSON persistence).
+Emits per-cell normalized IPC (vs GTO), the per-workload policy
+ranking, per-group geomeans, and the Kendall-tau agreement of the
+derived and jittered rankings against the synthetic one — the
+figure-style answer to "would CIAO's win have shown up if we had only
+evaluated on synthetic streams?".
 """
 from __future__ import annotations
 
@@ -53,21 +56,26 @@ def kendall_tau(a: Sequence[str], b: Sequence[str]) -> float:
 
 
 def main(scale: float = 0.5, processes: Optional[int] = None,
-         json_path: Optional[str] = None):
+         json_path: Optional[str] = None, engine: str = "auto"):
     derived = tuple(sorted(workload_names("derived")))
+    # arrival-jittered twins (repro.workloads.derived, ROADMAP ranking-
+    # gap study): same walks, staggered warp arrival
+    jittered = tuple(sorted(workload_names("derived-jit")))
     grid = ExperimentGrid(name="workloads",
-                          workloads=SYNTHETIC + derived,
+                          workloads=SYNTHETIC + derived + jittered,
                           policies=POLICIES, scale=scale,
                           best_swl_limits=LIMITS)
     t0 = time.perf_counter()
-    records = run_grid(grid, processes=processes, json_path=json_path)
+    records = run_grid(grid, processes=processes, json_path=json_path,
+                       engine=engine)
     us_per_cell = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
 
     by = index_records(records)
-    group_rel = {"synthetic": {p: [] for p in POLICIES},
-                 "derived": {p: [] for p in POLICIES}}
+    groups = ("synthetic", "derived", "derived_jit")
+    group_rel = {g: {p: [] for p in POLICIES} for g in groups}
     for name in grid.workloads:
-        group = "derived" if name in derived else "synthetic"
+        group = "derived_jit" if name in jittered else \
+            "derived" if name in derived else "synthetic"
         gto = by[name, "gto", "base"].ipc
         rel = {}
         for p in POLICIES:
@@ -78,7 +86,7 @@ def main(scale: float = 0.5, processes: Optional[int] = None,
 
     group_geo = {g: {p: geomean(v[p]) for p in POLICIES}
                  for g, v in group_rel.items()}
-    for g in ("synthetic", "derived"):
+    for g in groups:
         for p in POLICIES:
             emit(f"workloads/geomean_{g}/{p}", 0.0,
                  f"{group_geo[g][p]:.3f}")
@@ -86,8 +94,11 @@ def main(scale: float = 0.5, processes: Optional[int] = None,
              ">".join(_ranking(group_geo[g])))
     tau = kendall_tau(_ranking(group_geo["synthetic"]),
                       _ranking(group_geo["derived"]))
+    tau_jit = kendall_tau(_ranking(group_geo["synthetic"]),
+                          _ranking(group_geo["derived_jit"]))
     emit("workloads/rank_agreement_tau", 0.0, f"{tau:.3f}")
-    return {"geomeans": group_geo, "tau": tau}
+    emit("workloads/rank_agreement_tau_jit", 0.0, f"{tau_jit:.3f}")
+    return {"geomeans": group_geo, "tau": tau, "tau_jit": tau_jit}
 
 
 if __name__ == "__main__":

@@ -9,6 +9,13 @@ smoke test.
 
   python -m benchmarks.run [--only fig8,serving,...] [--scale 0.5]
                            [--jobs N] [--out DIR] [--quick]
+                           [--engine auto|batched|process]
+
+``--engine`` picks the runner execution engine for the grid sweeps:
+``batched`` forces the in-process batched lockstep engine
+(``repro.core.batched``), ``process`` the spawn-pool fan-out, and
+``auto`` (default) batches wide grids and falls back per cell for the
+rest (multi-SM cells always run per cell).
 """
 from __future__ import annotations
 
@@ -19,14 +26,15 @@ import time
 from benchmarks.common import emit, header
 
 
-def _quick(jobs: int, out: pathlib.Path) -> None:
+def _quick(jobs: int, out: pathlib.Path, engine: str = "auto") -> None:
     """Reduced grid (2 workloads × 3 policies, short traces) exercising
     the runner end-to-end: multiprocessing fan-out + JSON round-trip."""
     from repro.core.runner import ExperimentGrid, load_records, run_grid
     grid = ExperimentGrid(name="quick", workloads=("syrk", "kmn"),
                           policies=("gto", "ciao-p", "ciao-c"), scale=0.2)
     path = out / "quick.json"
-    records = run_grid(grid, processes=jobs, json_path=str(path))
+    records = run_grid(grid, processes=jobs, json_path=str(path),
+                       engine=engine)
     if load_records(str(path)) != records:
         raise RuntimeError("JSON round-trip mismatch in --quick smoke")
     for r in records:
@@ -37,7 +45,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig4,fig8,fig9,fig10,fig11,fig12,"
-                         "workloads,serving,kernels,roofline,perf")
+                         "workloads,serving,kernels,roofline,perf,"
+                         "batched")
     ap.add_argument("--scale", type=float, default=0.5,
                     help="trace-length scale for simulator benches")
     ap.add_argument("--jobs", type=int, default=0,
@@ -47,6 +56,9 @@ def main() -> None:
                     help="directory for JSON grid results")
     ap.add_argument("--quick", action="store_true",
                     help="reduced runner smoke grid, then exit")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "batched", "process"),
+                    help="runner execution engine for grid sweeps")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     out = pathlib.Path(args.out)
@@ -62,17 +74,19 @@ def main() -> None:
     header()
     t0 = time.time()
     if args.quick:
-        _quick(jobs, out)
+        _quick(jobs, out, engine=args.engine)
         print(f"# total_bench_seconds,{time.time() - t0:.1f},-")
         return
     if want("fig4"):
         from benchmarks import bench_interference
         bench_interference.main(processes=jobs,
-                                json_path=str(out / "fig4.json"))
+                                json_path=str(out / "fig4.json"),
+                                engine=args.engine)
     if want("fig8"):
         from benchmarks import bench_schedulers
         bench_schedulers.main(scale=args.scale, processes=jobs,
-                              json_path=str(out / "fig8.json"))
+                              json_path=str(out / "fig8.json"),
+                              engine=args.engine)
     if want("fig9"):
         from benchmarks import bench_phases
         bench_phases.main()
@@ -82,14 +96,16 @@ def main() -> None:
     if want("fig11"):
         from benchmarks import bench_sensitivity
         bench_sensitivity.main(processes=jobs,
-                               json_path=str(out / "fig11.json"))
+                               json_path=str(out / "fig11.json"),
+                               engine=args.engine)
     if want("fig12"):
         from benchmarks import bench_onchip
         bench_onchip.main()
     if want("workloads"):
         from benchmarks import bench_workloads
         bench_workloads.main(scale=args.scale, processes=jobs,
-                             json_path=str(out / "workloads.json"))
+                             json_path=str(out / "workloads.json"),
+                             engine=args.engine)
     if want("serving"):
         from benchmarks import bench_serving
         bench_serving.main()
@@ -105,6 +121,14 @@ def main() -> None:
         argv, sys.argv = sys.argv, [sys.argv[0]]
         try:
             bench_perf.main()
+        finally:
+            sys.argv = argv
+    if want("batched"):
+        import sys
+        from benchmarks import bench_batched
+        argv, sys.argv = sys.argv, [sys.argv[0]]
+        try:
+            bench_batched.main()
         finally:
             sys.argv = argv
     print(f"# total_bench_seconds,{time.time() - t0:.1f},-")

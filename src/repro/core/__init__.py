@@ -11,6 +11,8 @@ from repro.core.simulator import (  # noqa: F401
 from repro.core.gpu import (  # noqa: F401
     CTA, CTAScheduler, GPUConfig, GPUResult, GPUSimulator, make_ctas,
     run_gpu_policy_sweep)
+from repro.core.batched import (  # noqa: F401
+    BatchCell, BatchedSMEngine, run_batched, supports_config)
 from repro.core.runner import (  # noqa: F401
     ExperimentGrid, RunRecord, geomean, index_records, load_records,
     run_grid, save_records)

@@ -1,0 +1,395 @@
+/* C stepper for the batched lockstep SM engine (repro.core.batched).
+ *
+ * A direct transliteration of the scalar hot path in
+ * repro/core/simulator.py::SMSimulator.advance, operating on the SAME
+ * stacked batch arrays the numpy stepper uses (one row per cell). Each
+ * call advances every live, unpaused cell until it reaches a pause
+ * point — epoch boundary, warp completion, timeline sample, fully-
+ * throttled stretch, or the cycle cap — where control returns to Python
+ * so the real policy/detector objects replay the decision logic. Only
+ * deterministic int64 arithmetic lives here; every float stays in
+ * Python (bit-exactness contract, see tests/test_batched.py).
+ *
+ * Compiled on demand by repro/core/_cstep.py with the system C compiler
+ * (no Python.h — driven through ctypes). Field order of Params must
+ * match the ctypes.Structure in _cstep.py exactly.
+ */
+#include <stdint.h>
+
+typedef int64_t i64;
+typedef signed char i8;
+typedef uint64_t u64;
+
+enum {
+    P_EPOCH = 1,
+    P_TIMELINE = 2,
+    P_WARPDONE = 4,
+    P_THROTTLE = 8,
+    P_CAP = 16
+};
+
+#define HUGE_T ((i64)1 << 62)
+
+typedef struct {
+    /* dimensions */
+    i64 B, n, L, P;
+    i64 nf, l1_sets, l1_ways;
+    i64 vnf, v_sets, v_k;
+    i64 l2nf, l2_sets, l2_ways;
+    i64 nrb, dram_channels;
+    i64 nw, list_entries, sat_max;
+    /* config scalars */
+    i64 xor_hash, reuse_filter;
+    i64 lat_l1, lat_smem, lat_migrate, lat_l2, lat_dram, dram_gap;
+    i64 max_mlp, low_epoch, max_cycles, line_shift;
+    /* per-warp planes (B x n [x ...]) */
+    i64 *ready, *toks, *op_idx, *n_ops, *pend;
+    i8 *done, *avail, *iso, *byp, *live;
+    i64 *u_of, *n_of, *region_blocks;
+    /* per-cell scalars */
+    i64 *cycle, *instr, *li, *next_epoch, *window_mark;
+    i64 *last_wid, *tick, *l2_tick;
+    /* cache planes */
+    i64 *l1_tags, *l1_owners, *l1_stamp;
+    i8 *l1_reused;
+    i64 *smem_tags, *smem_owner;
+    i64 *v_addr, *v_evic, *v_head, *v_count, *v_inserts;
+    i64 *l2_tags, *l2_stamp, *l2_hits, *l2_misses;
+    i64 *dram_free, *dram_requests;
+    /* event counters */
+    i64 *cnt_l1_hit, *cnt_l1_miss, *cnt_smem_hit, *cnt_smem_miss;
+    i64 *cnt_smem_migrate, *cnt_bypass, *cnt_evictions;
+    i64 *cnt_smem_evictions, *cnt_vta_hits, *vta_hit_events;
+    /* control */
+    i64 *pause, *last_done_wid;
+    /* detector hooks: det_ptrs[b*4 + {irs_hits, vta_hits, interf, sat}];
+       score_ptrs[b] is CCWS's score buffer (0 = policy has no
+       on_mem_event hook) */
+    u64 *det_ptrs, *score_ptrs;
+    i64 *score_bump;
+    i64 *pair_dense; /* B x (n+1) x n, row 0 = evictor==-1 guard */
+} Params;
+
+static i64 l1_set(const Params *p, i64 line)
+{
+    i64 s = line % p->l1_sets;
+    if (p->xor_hash)
+        s = (s ^ ((line / p->l1_sets) % p->l1_sets)) % p->l1_sets;
+    return s;
+}
+
+/* circular-FIFO insert; the caller has excluded self-eviction */
+static void vta_insert(const Params *p, i64 b, i64 owner, i64 line,
+                       i64 evictor)
+{
+    i64 k = p->v_k;
+    i64 s = owner % p->v_sets;
+    i64 *addr = p->v_addr + b * p->vnf + s * k;
+    i64 *evic = p->v_evic + b * p->vnf + s * k;
+    i64 *head = p->v_head + b * p->v_sets + s;
+    i64 *cnt = p->v_count + b * p->v_sets + s;
+    if (*cnt == k) { /* full: FIFO-drop the oldest */
+        addr[*head] = line;
+        evic[*head] = evictor;
+        *head = (*head + 1) % k;
+    } else {
+        i64 f = (*head + *cnt) % k;
+        addr[f] = line;
+        evic[f] = evictor;
+        *cnt += 1;
+    }
+    p->v_inserts[b] += 1;
+}
+
+/* membership scan + FIFO pop of the oldest match + interference-list
+ * bookkeeping (the fused interference.on_miss). Returns 1 on a VTA hit.
+ * Physical slots outside the logical FIFO window are always -1, so the
+ * membership scan over all k slots equals the scalar core's dict. */
+static int vta_probe(const Params *p, i64 b, i64 wid, i64 line)
+{
+    i64 k = p->v_k;
+    i64 s = wid % p->v_sets;
+    i64 *addr = p->v_addr + b * p->vnf + s * k;
+    int member = 0;
+    for (i64 j = 0; j < k; j++)
+        if (addr[j] == line) { member = 1; break; }
+    if (!member)
+        return 0;
+    i64 *evic = p->v_evic + b * p->vnf + s * k;
+    i64 h = p->v_head[b * p->v_sets + s];
+    i64 cc = p->v_count[b * p->v_sets + s];
+    i64 evictor = -1;
+    for (i64 j = 0; j < cc; j++) { /* oldest-first logical order */
+        i64 f = (h + j) % k;
+        if (addr[f] == line) {
+            evictor = evic[f];
+            for (i64 jj = j; jj < cc - 1; jj++) {
+                i64 f0 = (h + jj) % k;
+                i64 f1 = (h + jj + 1) % k;
+                addr[f0] = addr[f1];
+                evic[f0] = evic[f1];
+            }
+            i64 fl = (h + cc - 1) % k;
+            addr[fl] = -1;
+            evic[fl] = -1;
+            p->v_count[b * p->v_sets + s] = cc - 1;
+            ((i64 *)(uintptr_t)p->det_ptrs[b * 4 + 1])[s] += 1;
+            break;
+        }
+    }
+    p->vta_hit_events[b] += 1;
+    p->cnt_vta_hits[b] += 1;
+    ((i64 *)(uintptr_t)p->det_ptrs[b * 4 + 0])[wid % p->nw] += 1;
+    p->pair_dense[b * (p->n + 1) * p->n + (evictor + 1) * p->n + wid] += 1;
+    i64 i = wid % p->list_entries;
+    i64 *interf = (i64 *)(uintptr_t)p->det_ptrs[b * 4 + 2];
+    i64 *sat = (i64 *)(uintptr_t)p->det_ptrs[b * 4 + 3];
+    if (interf[i] == evictor) {
+        if (sat[i] < p->sat_max)
+            sat[i] += 1;
+    } else if (interf[i] == -1) {
+        interf[i] = evictor;
+        sat[i] = 0;
+    } else if (sat[i] == 0) {
+        interf[i] = evictor;
+    } else {
+        sat[i] -= 1;
+    }
+    return 1;
+}
+
+static void run_cell(const Params *p, i64 b)
+{
+    const i64 n = p->n, L = p->L, P = p->P;
+    i64 *ready = p->ready + b * n;
+    i64 *op_idx = p->op_idx + b * n;
+    i64 *n_ops = p->n_ops + b * n;
+    i64 *pend = p->pend + b * n * P;
+    i8 *done = p->done + b * n;
+    i8 *avail = p->avail + b * n;
+    i8 *iso = p->iso + b * n;
+    i8 *byp = p->byp + b * n;
+    const i64 *toks = p->toks + p->u_of[b] * n * L;
+    i64 *l1_tags = p->l1_tags + b * p->nf;
+    i64 *l1_owners = p->l1_owners + b * p->nf;
+    i64 *l1_stamp = p->l1_stamp + b * p->nf;
+    i8 *l1_reused = p->l1_reused + b * p->nf;
+    i64 *smem_tags = p->smem_tags + b * p->nrb;
+    i64 *smem_owner = p->smem_owner + b * p->nrb;
+    i64 *l2_tags = p->l2_tags + b * p->l2nf;
+    i64 *l2_stamp = p->l2_stamp + b * p->l2nf;
+    i64 *dram_free = p->dram_free + b * p->dram_channels;
+    i64 *score = p->score_ptrs[b]
+        ? (i64 *)(uintptr_t)p->score_ptrs[b] : (i64 *)0;
+    i64 cycle = p->cycle[b], li = p->li[b], instr = p->instr[b];
+    i64 last_wid = p->last_wid[b];
+    i64 tick = p->tick[b], l2_tick = p->l2_tick[b];
+    i64 rb = p->region_blocks[b];
+    i64 flags = 0;
+
+    for (;;) {
+        if (cycle >= p->max_cycles) {
+            flags = P_CAP;
+            break;
+        }
+        /* pick a warp: greedy (keep last), else oldest ready & allowed */
+        i64 wid = last_wid;
+        if (wid < 0 || !avail[wid] || ready[wid] > cycle) {
+            i64 w = -1;
+            for (i64 i = 0; i < n; i++)
+                if (avail[i] && ready[i] <= cycle) { w = i; break; }
+            if (w >= 0) {
+                wid = last_wid = w;
+            } else {
+                /* fused event skip: jump to the earliest wake-up */
+                i64 best = HUGE_T, w2 = -1;
+                for (i64 i = 0; i < n; i++)
+                    if (avail[i] && ready[i] < best) {
+                        best = ready[i];
+                        w2 = i;
+                    }
+                if (w2 < 0) { /* everything throttled */
+                    flags = P_THROTTLE;
+                    break;
+                }
+                if (best >= p->max_cycles) {
+                    cycle = p->max_cycles;
+                    flags = P_CAP;
+                    break;
+                }
+                cycle = best;
+                if (last_wid >= 0 && avail[last_wid] &&
+                        ready[last_wid] <= best)
+                    wid = last_wid; /* greedy still wins the tie */
+                else
+                    wid = last_wid = w2;
+            }
+        }
+        i64 tok = toks[wid * L + op_idx[wid]];
+        i64 adv;
+        if (tok >= 0) { /* memory instruction */
+            li += 1;
+            i64 line = tok >> p->line_shift;
+            int vta_hit = 0;
+            i64 lat = -1; /* -1 == "to the post-L1 stage" */
+            if (byp[wid]) { /* statPCAL bypass */
+                p->cnt_bypass[b] += 1;
+            } else if (iso[wid]) { /* CIAO-P smem redirection */
+                if (rb > 0) {
+                    i64 idx = line % rb;
+                    i64 old = smem_tags[idx];
+                    if (old == line) {
+                        p->cnt_smem_hit[b] += 1;
+                        lat = p->lat_smem;
+                    } else {
+                        if (old >= 0) {
+                            p->cnt_smem_evictions[b] += 1;
+                            i64 owner = smem_owner[idx];
+                            if (owner != wid)
+                                vta_insert(p, b, owner, old, wid);
+                        }
+                        if (vta_probe(p, b, wid, line))
+                            vta_hit = 1;
+                        /* migration: single-copy coherence */
+                        i64 base1 = l1_set(p, line) * p->l1_ways;
+                        i64 f = -1;
+                        for (i64 g = base1; g < base1 + p->l1_ways; g++)
+                            if (l1_tags[g] == line) { f = g; break; }
+                        if (f >= 0) {
+                            l1_tags[f] = -1;
+                            l1_owners[f] = -1;
+                            p->cnt_smem_migrate[b] += 1;
+                            lat = p->lat_migrate;
+                        } else {
+                            p->cnt_smem_miss[b] += 1;
+                        }
+                        smem_tags[idx] = line;
+                        smem_owner[idx] = wid;
+                    }
+                }
+            } else { /* L1D path */
+                i64 base1 = l1_set(p, line) * p->l1_ways;
+                i64 f = -1;
+                for (i64 g = base1; g < base1 + p->l1_ways; g++)
+                    if (l1_tags[g] == line) { f = g; break; }
+                if (f >= 0) { /* L1D hit */
+                    p->cnt_l1_hit[b] += 1;
+                    l1_reused[f] = 1;
+                    l1_stamp[f] = tick++;
+                    lat = p->lat_l1;
+                } else { /* miss: probe VTA, fill with stamp-LRU victim */
+                    p->cnt_l1_miss[b] += 1;
+                    if (vta_probe(p, b, wid, line))
+                        vta_hit = 1;
+                    i64 vic = base1;
+                    i64 bs = l1_stamp[base1];
+                    for (i64 g = base1 + 1; g < base1 + p->l1_ways; g++)
+                        if (l1_stamp[g] < bs) {
+                            bs = l1_stamp[g];
+                            vic = g;
+                        }
+                    i64 old = l1_tags[vic];
+                    if (old >= 0) {
+                        p->cnt_evictions[b] += 1;
+                        i64 owner = l1_owners[vic];
+                        if ((l1_reused[vic] || !p->reuse_filter) &&
+                                owner != wid)
+                            vta_insert(p, b, owner, old, wid);
+                    }
+                    l1_tags[vic] = line;
+                    l1_owners[vic] = wid;
+                    l1_reused[vic] = 0;
+                    l1_stamp[vic] = tick++;
+                }
+            }
+            if (lat < 0) { /* post-L1: L2 tags + DRAM queueing */
+                i64 base2 = (line % p->l2_sets) * p->l2_ways;
+                i64 f2 = -1;
+                for (i64 g = base2; g < base2 + p->l2_ways; g++)
+                    if (l2_tags[g] == line) { f2 = g; break; }
+                if (f2 >= 0) { /* L2 hit */
+                    p->l2_hits[b] += 1;
+                    lat = p->lat_l2;
+                } else { /* L2 miss -> DRAM channel queue */
+                    f2 = base2;
+                    i64 bs = l2_stamp[base2];
+                    for (i64 g = base2 + 1; g < base2 + p->l2_ways; g++)
+                        if (l2_stamp[g] < bs) {
+                            bs = l2_stamp[g];
+                            f2 = g;
+                        }
+                    l2_tags[f2] = line;
+                    p->l2_misses[b] += 1;
+                    i64 ch = (line >> 2) % p->dram_channels;
+                    i64 start = cycle > dram_free[ch] ? cycle
+                                                      : dram_free[ch];
+                    dram_free[ch] = start + p->dram_gap;
+                    p->dram_requests[b] += 1;
+                    lat = p->lat_dram + start - cycle;
+                }
+                l2_stamp[f2] = l2_tick++;
+            }
+            if (vta_hit && score) /* CCWS on_mem_event("vta_hit") */
+                score[wid] += p->score_bump[b];
+            i64 done_t = cycle + lat;
+            if (tok & 1) { /* dependent use: block until it returns */
+                ready[wid] = done_t;
+            } else { /* hit-under-miss up to max_mlp outstanding */
+                i64 *pd = pend + wid * P;
+                i64 mi = 0;
+                for (i64 k2 = 1; k2 < P; k2++)
+                    if (pd[k2] < pd[mi]) mi = k2;
+                pd[mi] = done_t; /* overwrite a stale (<= cycle) slot */
+                i64 outstanding = 0, earliest = HUGE_T;
+                for (i64 k2 = 0; k2 < P; k2++)
+                    if (pd[k2] > cycle) {
+                        outstanding += 1;
+                        if (pd[k2] < earliest)
+                            earliest = pd[k2];
+                    }
+                ready[wid] = outstanding >= p->max_mlp ? earliest
+                                                       : cycle + 1;
+            }
+            adv = 1;
+            cycle += 1;
+        } else { /* batched ALU run up to the next memory instruction */
+            adv = -tok;
+            li += adv;
+            cycle += adv;
+            ready[wid] = cycle;
+        }
+        i64 pn = ++op_idx[wid];
+        instr += adv;
+        flags = 0;
+        if (pn >= n_ops[wid]) {
+            done[wid] = 1;
+            avail[wid] = 0;
+            if (last_wid == wid)
+                last_wid = -1;
+            p->last_done_wid[b] = wid;
+            flags |= P_WARPDONE;
+        }
+        if (li >= p->next_epoch[b])
+            flags |= P_EPOCH;
+        if (instr >= p->window_mark[b])
+            flags |= P_TIMELINE;
+        if (flags)
+            break;
+    }
+    p->pause[b] = flags;
+    p->cycle[b] = cycle;
+    p->li[b] = li;
+    p->instr[b] = instr;
+    p->last_wid[b] = last_wid;
+    p->tick[b] = tick;
+    p->l2_tick[b] = l2_tick;
+}
+
+void step_cells(const Params *p)
+{
+    for (i64 b = 0; b < p->B; b++) {
+        if (!p->live[b] || p->pause[b])
+            continue;
+        run_cell(p, b);
+    }
+}

@@ -1,0 +1,831 @@
+"""Batched lockstep SM engine: B independent grid cells as one program.
+
+The scalar core (:mod:`repro.core.simulator`) hit the measured ceiling of
+a per-cell CPython dispatch loop; every figure sweep, though, runs dozens
+of *independent* (workload, policy, seed, variant) cells over the same
+deterministic integer state machine. This module stacks the per-cell
+state ``SMSimulator`` keeps as scalars/lists — warp cursors, token
+streams (padded/stacked via :func:`repro.workloads.tokens.
+stack_token_streams`), L1/smem tag planes, VTA FIFOs, policy masks,
+detector counters, L2 tags and DRAM queues — along a leading batch axis,
+and advances B homogeneous cells (same :class:`SimConfig`) together.
+
+Two interchangeable steppers drive the *same* stacked arrays:
+
+* ``numpy`` — the lockstep stepper: one scheduler dispatch per live cell
+  per iteration, the full per-access chain (greedy/oldest pick, L1D way
+  scan, VTA insert, L2 tags, DRAM queueing, MLP pending queues) as
+  masked vectorized updates, so one ``np.take``/fancy-scatter chain
+  replaces B Python dispatch iterations. Runs everywhere.
+* ``c`` — the same per-dispatch state machine transliterated to C
+  (thread-free, int64 only), compiled on demand with the system C
+  compiler via :mod:`repro.core._cstep` and driven through ``ctypes``
+  over the identical array layout. This retires the ROADMAP
+  "C-extension experiment for the dispatch loop" item; when no compiler
+  is available the engine silently uses the numpy stepper.
+
+``backend="auto"`` picks ``c`` when available. Both steppers are
+**bit-exact per cell** against ``SMSimulator``: every floating-point
+quantity (IRS snapshots, timeline IPC windows, DRAM utilization) and
+every policy/detector *decision* is computed in Python against the real
+per-cell :class:`~repro.core.policies.BasePolicy` /
+:class:`~repro.core.interference.InterferenceDetector` objects — the
+steppers pause a cell whenever it reaches an epoch boundary, a warp
+completion, a timeline sample, or a fully-throttled stretch, and shared
+Python handlers replay exactly what the scalar loop does at those
+points. Only the deterministic integer per-dispatch chain is
+vectorized/compiled. ``tests/test_batched.py`` pins both steppers
+against the golden cells and property-tests batch-of-1 equality.
+
+Not every cell batches: multi-SM chips need interleaved stepping, and
+two scalar-core configuration corners (queued L2 banks, MSHR occupancy
+gating) are modeled through object methods the steppers do not
+replicate. :func:`supports_config` is the gate; the runner
+(:mod:`repro.core.runner`) falls back to per-cell execution for those.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interference import InterferenceDetector
+from repro.core.onchip import LINE, SMMT
+from repro.core.policies import BasePolicy, CCWSPolicy, make_policy
+from repro.core.simulator import SimConfig, SimResult, _HUGE
+from repro.workloads import tokens as _tokens
+
+_SHIFT = _tokens.TOKEN_LINE_SHIFT
+
+# pause-reason bits shared with the C stepper (src/repro/core/_cstep.c)
+P_EPOCH = 1
+P_TIMELINE = 2
+P_WARPDONE = 4
+P_THROTTLE = 8
+P_CAP = 16
+
+
+def supports_config(cfg: SimConfig) -> bool:
+    """Can the batched engine reproduce this config bit-exactly?
+
+    The scalar core's fused fast path requires an unqueued L2
+    (``l2_bank_gap == 0``) and no MSHR occupancy gating; those corners go
+    through object methods (``MemoryHierarchy.access`` / ``MSHR.admit``)
+    that the steppers do not replicate.
+    """
+    return cfg.l2_bank_gap == 0 and not cfg.onchip.mshr_gate
+
+
+@dataclasses.dataclass
+class BatchCell:
+    """One grid cell: a workload under one policy. The config is shared
+    by the whole batch (homogeneous-group contract)."""
+    workload: Any
+    policy: str
+    policy_kwargs: Optional[dict] = None
+
+
+class BatchedSMEngine:
+    """Run B single-SM cells to completion in lockstep.
+
+    Usage::
+
+        results = BatchedSMEngine(cells, cfg).run()   # List[SimResult]
+    """
+
+    timeline_every: int = 20_000
+
+    def __init__(self, cells: Sequence[BatchCell],
+                 cfg: Optional[SimConfig] = None,
+                 backend: str = "auto"):
+        self.cfg = cfg = cfg if cfg is not None else SimConfig()
+        if not supports_config(cfg):
+            raise ValueError(
+                "config not supported by the batched engine "
+                "(l2_bank_gap != 0 or mshr_gate); use SMSimulator")
+        if backend not in ("auto", "numpy", "c"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self._backend_req = backend
+        self.cells = list(cells)
+        self.B = len(self.cells)
+        if not self.B:
+            raise ValueError("empty batch")
+        self._build_state()
+
+    # ------------------------------------------------------------ set-up
+    def _build_state(self) -> None:
+        cfg = self.cfg
+        B = self.B
+        oc = cfg.onchip
+        dcfg = cfg.detector
+        self.n_warps = n = cfg.num_warps
+        self.low_epoch = dcfg.low_epoch
+        self.max_mlp = cfg.max_mlp
+        self.max_cycles = cfg.max_cycles
+        self.l1_sets, self.l1_ways = oc.num_sets, oc.ways
+        self.xor_hash, self.reuse_filter = oc.xor_hash, oc.reuse_filter
+        self.v_sets, self.v_k = dcfg.vta_sets, dcfg.vta_tags_per_set
+        self.nw, self.list_entries = dcfg.num_warps, dcfg.list_entries
+        self.sat_max = dcfg.sat_max
+        # same clamps as L2TagArray / DRAMModel (a tiny L2 still has one
+        # set; zero channels still means one)
+        self.l2_sets = max(cfg.l2_bytes // (LINE * cfg.l2_ways), 1)
+        self.l2_ways = cfg.l2_ways
+        self.dram_gap = cfg.dram_gap
+        self.dram_channels = max(cfg.dram_channels, 1)
+        nf = self.l1_sets * self.l1_ways
+        vnf = self.v_sets * self.v_k
+        l2nf = self.l2_sets * self.l2_ways
+        P = self.max_mlp + 1
+
+        # per-cell objects: the decision logic (policies, detector floats)
+        # is NOT re-implemented — the steppers call into these
+        self.dets: List[InterferenceDetector] = []
+        self.policies: List[BasePolicy] = []
+        self.n_of = np.zeros(B, np.int64)
+        self.region_blocks = np.zeros(B, np.int64)
+        streams_per_cell: List[List[List[int]]] = []
+        uniq: Dict[int, int] = {}          # id(workload) -> u index
+        self.u_of = np.zeros(B, np.int64)
+        for b, cell in enumerate(self.cells):
+            wl = cell.workload
+            det = InterferenceDetector(dcfg)
+            self.dets.append(det)
+            self.policies.append(make_policy(
+                cell.policy, n, det, **(cell.policy_kwargs or {})))
+            self.n_of[b] = min(n, len(wl.traces))
+            # CIAO-P region size exactly as OnChipMemory.__init__ does it
+            smmt = SMMT(oc.smem_bytes)
+            if wl.smem_used_bytes:
+                smmt.allocate("app", wl.smem_used_bytes)
+            _, size = smmt.reserve_unused()
+            self.region_blocks[b] = size // (LINE + 4)
+            u = uniq.get(id(wl))
+            if u is None:
+                u = uniq[id(wl)] = len(streams_per_cell)
+                streams_per_cell.append(_tokens.encode_workload(
+                    wl.traces, cfg.dep_every, n))
+            self.u_of[b] = u
+        # token streams stacked once per distinct workload (cells of the
+        # same workload share rows through u_of)
+        self.toks, n_ops_u = _tokens.stack_token_streams(
+            streams_per_cell, n)
+        self.L = self.toks.shape[2]
+        self.n_ops = n_ops_u[self.u_of]            # (B, n) per-cell copy
+        nrb = max(int(self.region_blocks.max()), 1)
+
+        # ---- stacked hot state (one row per cell) ----
+        i64, b8 = np.int64, np.bool_
+        self.ready = np.zeros((B, n), i64)
+        self.done = self.n_ops == 0                # includes padded warps
+        self.avail = np.zeros((B, n), b8)
+        self.iso = np.zeros((B, n), b8)
+        self.byp = np.zeros((B, n), b8)
+        self.op_idx = np.zeros((B, n), i64)
+        self.pend = np.zeros((B, n, P), i64)
+        self.P = P
+        self.remaining = np.asarray(
+            [int(self.n_of[b]) - int(np.count_nonzero(
+                self.done[b, :self.n_of[b]])) for b in range(B)], i64)
+        self.cycle = np.zeros(B, i64)
+        self.instr = np.zeros(B, i64)
+        self.li = np.zeros(B, i64)
+        self.irs_off = np.zeros(B, i64)
+        self.last_wid = np.full(B, -1, i64)
+        # cells whose policy keeps the base no-op epoch_tick (GTO,
+        # Best-SWL) have NO observable epoch behavior — the scalar loop's
+        # epoch block only syncs detector counters nothing reads and
+        # calls a pass. Park their epoch trigger at infinity so the
+        # steppers never pause them for it (finalize still syncs the
+        # detector mirrors).
+        passive = np.asarray(
+            [type(p).epoch_tick is BasePolicy.epoch_tick
+             for p in self.policies], bool)
+        self.next_epoch = np.where(passive, _HUGE,
+                                   self.low_epoch).astype(i64)
+        self.window_mark = np.full(B, self.timeline_every, i64)
+        self.last_instr = np.zeros(B, i64)
+        self.last_cycle = np.zeros(B, i64)
+        self.mask_ver = np.full(B, -1, i64)
+        self.tick = np.ones(B, i64)                # OnChipMemory._tick
+        self.l1_tags = np.full((B, nf), -1, i64)
+        self.l1_owners = np.full((B, nf), -1, i64)
+        self.l1_reused = np.zeros((B, nf), b8)
+        self.l1_stamp = np.zeros((B, nf), i64)
+        self.smem_tags = np.full((B, nrb), -1, i64)
+        self.smem_owner = np.full((B, nrb), -1, i64)
+        self.nrb = nrb
+        self.v_addr = np.full((B, vnf), -1, i64)
+        self.v_evic = np.full((B, vnf), -1, i64)
+        self.v_head = np.zeros((B, self.v_sets), i64)
+        self.v_count = np.zeros((B, self.v_sets), i64)
+        self.v_inserts = np.zeros(B, i64)
+        self.l2_tags = np.full((B, l2nf), -1, i64)
+        self.l2_stamp = np.zeros((B, l2nf), i64)
+        self.l2_tick = np.ones(B, i64)             # LRUTags._tick
+        self.l2_hits = np.zeros(B, i64)
+        self.l2_misses = np.zeros(B, i64)
+        self.dram_free = np.zeros((B, self.dram_channels), i64)
+        self.dram_requests = np.zeros(B, i64)
+        for name in ("l1_hit", "l1_miss", "smem_hit", "smem_miss",
+                     "smem_migrate", "bypass", "evictions",
+                     "smem_evictions", "vta_hits"):
+            setattr(self, "cnt_" + name, np.zeros(B, i64))
+        self.vta_hit_events = np.zeros(B, i64)
+        self.pause = np.zeros(B, i64)
+        self.live = np.ones(B, b8)
+        self.nf, self.vnf, self.l2nf = nf, vnf, l2nf
+
+        # flat zero-copy views + index constants for the numpy stepper
+        # (per-call numpy overhead dominates at these batch widths, so
+        # every hoisted allocation counts)
+        self._ready_f = self.ready.reshape(-1)
+        self._avail_f = self.avail.reshape(-1)
+        self._done_f = self.done.reshape(-1)
+        self._iso_f = self.iso.reshape(-1)
+        self._byp_f = self.byp.reshape(-1)
+        self._op_idx_f = self.op_idx.reshape(-1)
+        self._n_ops_f = self.n_ops.reshape(-1)
+        self._toks_f = self.toks.reshape(-1)
+        self._pend_f = self.pend.reshape(-1)
+        self._l1_tags_f = self.l1_tags.reshape(-1)
+        self._l1_owners_f = self.l1_owners.reshape(-1)
+        self._l1_reused_f = self.l1_reused.reshape(-1)
+        self._l1_stamp_f = self.l1_stamp.reshape(-1)
+        self._smem_tags_f = self.smem_tags.reshape(-1)
+        self._smem_owner_f = self.smem_owner.reshape(-1)
+        self._v_addr_f = self.v_addr.reshape(-1)
+        self._v_evic_f = self.v_evic.reshape(-1)
+        self._v_head_f = self.v_head.reshape(-1)
+        self._v_count_f = self.v_count.reshape(-1)
+        self._l2_tags_f = self.l2_tags.reshape(-1)
+        self._l2_stamp_f = self.l2_stamp.reshape(-1)
+        self._dram_free_f = self.dram_free.reshape(-1)
+        ar = np.arange
+        self._arB = ar(B, dtype=np.int64)
+        self._ar_ways = ar(self.l1_ways, dtype=np.int64)
+        self._ar_vk = ar(self.v_k, dtype=np.int64)
+        self._ar_l2w = ar(self.l2_ways, dtype=np.int64)
+        self._ar_P = ar(P, dtype=np.int64)
+        self._row_n = self._arB * n
+        self._row_nf = self._arB * nf
+        self._row_vnf = self._arB * vnf
+        self._row_vsets = self._arB * self.v_sets
+        self._row_l2nf = self._arB * l2nf
+        self._row_nrb = self._arB * nrb
+        self._row_ch = self._arB * self.dram_channels
+        self._tok_base = self.u_of * (n * self.L)
+
+        self.timelines: List[List[Tuple[int, float, int]]] = \
+            [[] for _ in range(B)]
+        self.active_samples: List[List[int]] = [[] for _ in range(B)]
+        self.results: List[Optional[SimResult]] = [None] * B
+        # pair counts: the numpy stepper updates det.pair_counts directly
+        # (VTA hits are rare); the C stepper fills a dense (n+1, n) plane
+        # merged at finalize — keys are (evictor, raw wid), row 0 is the
+        # evictor==-1 guard row (unreachable when the membership scan
+        # found a match).
+        self.pair_dense = np.zeros((B, (n + 1) * n), np.int64)
+        # which warp the C stepper just retired (P_WARPDONE payload)
+        self.last_done_wid = np.zeros(B, np.int64)
+        for b in range(B):
+            self._refresh_masks(b)
+            if self.remaining[b] == 0:
+                self._finalize(b)
+
+    # --------------------------------------------------- shared handlers
+    # Everything below mirrors, line for line, what SMSimulator.advance
+    # does outside the per-dispatch chain. The steppers guarantee these
+    # run at exactly the same points in each cell's instruction stream.
+    def _refresh_masks(self, b: int) -> None:
+        pol = self.policies[b]
+        self.mask_ver[b] = pol.mask_version
+        nb = int(self.n_of[b])
+        self.avail[b, :nb] = pol.allowed_mask[:nb] & ~self.done[b, :nb]
+        if nb < self.n_warps:
+            self.avail[b, nb:] = False
+        self.iso[b, :nb] = pol.isolated_mask[:nb]
+        self.byp[b, :nb] = pol.bypass_mask[:nb]
+
+    def _maybe_refresh(self, b: int) -> None:
+        if self.policies[b].mask_version != self.mask_ver[b]:
+            self._refresh_masks(b)
+
+    def _util(self, b: int) -> float:
+        cyc = int(self.cycle[b])
+        if cyc <= 0:
+            return 0.0
+        util = int(self.dram_requests[b]) * self.dram_gap / \
+            (self.dram_channels * cyc)
+        return 1.0 if util > 1.0 else util
+
+    def _epoch_call(self, b: int) -> None:
+        det = self.dets[b]
+        li = int(self.li[b])
+        det.inst_total, det.irs_inst = li, li - int(self.irs_off[b])
+        pol = self.policies[b]
+        pol.epoch_tick(None, self.done[b, :int(self.n_of[b])],
+                       self._util(b))
+        self.irs_off[b] = li - det.irs_inst       # aging moves this
+        self._maybe_refresh(b)
+        if isinstance(pol, CCWSPolicy):
+            # CCWS epoch decay reassigns the score buffer; re-point the
+            # C stepper at the new one
+            self._score_ptr_refresh(b)
+
+    def _handle_epoch(self, b: int) -> None:
+        li = int(self.li[b])
+        self.next_epoch[b] = (li // self.low_epoch + 1) * self.low_epoch
+        self._epoch_call(b)
+
+    def _handle_throttle(self, b: int) -> None:
+        # everything throttled: advance to let epochs fire. Note the
+        # scalar loop does NOT re-anchor next_epoch here.
+        self.cycle[b] += self.low_epoch
+        self.li[b] += self.low_epoch
+        self._epoch_call(b)
+
+    def _handle_warp_done(self, b: int, wid: int) -> None:
+        # NOTE: does not finalize — the scalar loop still runs the epoch
+        # and timeline checks on the dispatch that retires the last warp,
+        # so the caller finalizes after those handlers.
+        self.remaining[b] -= 1
+        self.policies[b].on_warp_done(wid)
+        self._maybe_refresh(b)
+
+    def _handle_timeline(self, b: int) -> None:
+        act = self.policies[b].num_allowed()
+        self.active_samples[b].append(act)
+        dc = int(self.cycle[b]) - int(self.last_cycle[b])
+        if dc < 1:
+            dc = 1
+        self.timelines[b].append(
+            (int(self.cycle[b]),
+             (int(self.instr[b]) - int(self.last_instr[b])) / dc, act))
+        self.last_instr[b] = self.instr[b]
+        self.last_cycle[b] = self.cycle[b]
+        self.window_mark[b] += self.timeline_every
+
+    def _vta_probe_pop(self, b: int, wid: int, line: int) -> None:
+        """Fused ``_vta_probe_hit`` against batch rows + the real
+        detector (the caller's scan already confirmed membership)."""
+        det = self.dets[b]
+        v_addr, v_evic = self.v_addr[b], self.v_evic[b]
+        v_k = self.v_k
+        s = wid % self.v_sets
+        base = s * v_k
+        h = int(self.v_head[b, s])
+        cc = int(self.v_count[b, s])
+        evictor = -1
+        for j in range(cc):                 # oldest-first logical order
+            f = base + (h + j) % v_k
+            if v_addr[f] == line:
+                evictor = int(v_evic[f])
+                for jj in range(j, cc - 1):
+                    f0 = base + (h + jj) % v_k
+                    f1 = base + (h + jj + 1) % v_k
+                    v_addr[f0] = v_addr[f1]
+                    v_evic[f0] = v_evic[f1]
+                fl = base + (h + cc - 1) % v_k
+                v_addr[fl] = -1
+                v_evic[fl] = -1
+                self.v_count[b, s] = cc - 1
+                det.vta.hits[s] += 1
+                break
+        self.vta_hit_events[b] += 1
+        self.cnt_vta_hits[b] += 1
+        det.irs_hits[wid % self.nw] += 1
+        key = (evictor, wid)
+        det.pair_counts[key] = det.pair_counts.get(key, 0) + 1
+        i = wid % self.list_entries
+        interfering, sat = det.interfering_wid, det.sat_counter
+        if interfering[i] == evictor:
+            if sat[i] < self.sat_max:
+                sat[i] += 1
+        elif interfering[i] == -1:
+            interfering[i] = evictor
+            sat[i] = 0
+        elif sat[i] == 0:
+            interfering[i] = evictor
+        else:
+            sat[i] -= 1
+        self.policies[b].on_mem_event(wid, "vta_hit")
+
+    def _finalize(self, b: int) -> None:
+        if self.results[b] is not None:
+            return
+        self.live[b] = False
+        det = self.dets[b]
+        # same exit flush as the scalar advance (inst counters are not
+        # part of SimResult, but the detector object should read true)
+        li = int(self.li[b])
+        det.inst_total, det.irs_inst = li, li - int(self.irs_off[b])
+        det.vta.inserts += int(self.v_inserts[b])
+        det.vta_hit_events = int(self.vta_hit_events[b])
+        # merge the C stepper's dense pair counts (no-op under numpy)
+        dense = self.pair_dense[b]
+        for flat in np.flatnonzero(dense):
+            e, w = divmod(int(flat), self.n_warps)
+            key = (e - 1, w)
+            det.pair_counts[key] = det.pair_counts.get(key, 0) \
+                + int(dense[flat])
+        instr, cycle = int(self.instr[b]), int(self.cycle[b])
+        pairs = sorted(([e, w, c] for (e, w), c in det.pair_counts.items()),
+                       key=lambda t: (-t[2], t[0], t[1]))
+        stats = {
+            "l1_hit": int(self.cnt_l1_hit[b]),
+            "l1_miss": int(self.cnt_l1_miss[b]),
+            "smem_hit": int(self.cnt_smem_hit[b]),
+            "smem_miss": int(self.cnt_smem_miss[b]),
+            "smem_migrate": int(self.cnt_smem_migrate[b]),
+            "bypass": int(self.cnt_bypass[b]),
+            "evictions": int(self.cnt_evictions[b]),
+            "smem_evictions": int(self.cnt_smem_evictions[b]),
+            "vta_hits": int(self.cnt_vta_hits[b]),
+            # private hierarchy: the SM's request count IS the DRAM's
+            "dram_reqs": int(self.dram_requests[b]),
+        }
+        h = stats["l1_hit"] + stats["smem_hit"]
+        tot = h + stats["l1_miss"] + stats["smem_miss"] \
+            + stats["smem_migrate"]
+        samples = self.active_samples[b]
+        self.results[b] = SimResult(
+            policy=self.policies[b].name,
+            cycles=cycle,
+            instructions=instr,
+            ipc=instr / max(cycle, 1),
+            l1_hit_rate=h / tot if tot else 0.0,
+            vta_hits=int(self.vta_hit_events[b]),
+            mean_active_warps=(float(np.mean(samples)) if samples
+                               else float(self.n_of[b])),
+            stats=stats,
+            timeline=list(self.timelines[b]),
+            pairs=pairs,
+        )
+
+    # ------------------------------------------------------------- run
+    def run(self, timeline_every: int = 20_000) -> List[SimResult]:
+        """Run every cell to completion (one-shot: like
+        ``SMSimulator.run`` but for the whole batch)."""
+        if timeline_every != self.timeline_every:
+            self.timeline_every = timeline_every
+            self.window_mark[:] = timeline_every
+        backend = self._backend_req
+        if backend == "auto":
+            from repro.core import _cstep
+            backend = "c" if _cstep.available() else "numpy"
+        if backend == "c":
+            from repro.core import _cstep
+            if not _cstep.available():
+                raise RuntimeError(
+                    f"C stepper unavailable: {_cstep.unavailable_reason()}")
+            self._run_c(_cstep)
+        else:
+            self._run_numpy()
+        self.backend = backend
+        return [r for r in self.results]
+
+    # ------------------------------------------------- numpy lockstep
+    def _run_numpy(self) -> None:
+        while bool(self.live.any()):
+            self._np_iteration()
+
+    def _np_iteration(self) -> None:
+        """One lockstep iteration: one scheduler dispatch per live cell,
+        all cells advanced by masked vectorized updates. Mirrors one trip
+        through the scalar ``while`` loop of ``SMSimulator.advance``."""
+        live = self.live
+        cycle = self.cycle
+        # cells at the cycle cap stop (scalar loop condition)
+        if cycle.max() >= self.max_cycles:
+            cap = live & (cycle >= self.max_cycles)
+            if cap.any():
+                for b in np.flatnonzero(cap):
+                    self._finalize(b)
+                if not live.any():
+                    return
+        rowoff = self._row_n
+        ready_f, avail_f = self._ready_f, self._avail_f
+
+        # ---- warp selection (greedy-then-oldest + fused event skip) ----
+        lw = self.last_wid
+        lw_ok = lw >= 0
+        lwc = np.where(lw_ok, lw, 0)
+        g_idx = rowoff + lwc
+        greedy = live & lw_ok & avail_f[g_idx] & (ready_f[g_idx] <= cycle)
+        wid = np.where(greedy, lw, -1)
+        need = live & ~greedy
+        if need.any():
+            cand = (self.ready <= cycle[:, None]) & self.avail
+            w = cand.argmax(1)
+            found = need & cand.reshape(-1)[rowoff + w]
+            wid = np.where(found, w, wid)
+            self.last_wid = lw = np.where(found, w, lw)
+            skip = need & ~found
+            if skip.any():
+                sched = np.where(self.avail, self.ready, _HUGE)
+                w2 = sched.argmin(1)
+                thr = skip & ~avail_f[rowoff + w2]
+                if thr.any():
+                    for b in np.flatnonzero(thr):
+                        self._handle_throttle(b)
+                sk = skip & ~thr
+                if sk.any():
+                    best = ready_f[rowoff + w2]
+                    clamp = sk & (best >= self.max_cycles)
+                    if clamp.any():
+                        cycle[clamp] = self.max_cycles
+                        for b in np.flatnonzero(clamp):
+                            self._finalize(b)
+                        sk &= ~clamp
+                    np.copyto(cycle, best, where=sk)
+                    lw_ok2 = lw >= 0
+                    lwc2 = np.where(lw_ok2, lw, 0)
+                    t_idx = rowoff + lwc2
+                    tie = sk & lw_ok2 & avail_f[t_idx] & \
+                        (ready_f[t_idx] <= best)
+                    wid = np.where(tie, lw, wid)
+                    w2sel = sk & ~tie
+                    wid = np.where(w2sel, w2, wid)
+                    self.last_wid = np.where(w2sel, w2, self.last_wid)
+
+        disp = self.live & (wid >= 0)
+        if not disp.any():
+            return
+        widc = np.where(disp, wid, 0)
+        rw = rowoff + widc
+
+        # ---- token fetch ----
+        oi = self._op_idx_f[rw]
+        tok = self._toks_f[self._tok_base + widc * self.L + oi]
+        alu = disp & (tok < 0)
+        mem = disp & ~alu
+
+        adv = np.where(alu, -tok, 0) + mem        # instructions retired
+        new_ready = ready_f[rw]
+
+        if mem.any():
+            new_ready = self._np_mem_chain(mem, tok, widc, rw, cycle,
+                                           new_ready)
+        # ALU: batched run up to the next memory instruction
+        new_ready = np.where(alu, cycle + adv, new_ready)
+
+        adv = np.where(disp, adv, 0)
+        self.li += adv
+        cycle += adv                               # mem rows: +1
+        ready_f[rw] = new_ready
+        oi_new = oi + disp
+        self._op_idx_f[rw] = oi_new
+        self.instr += adv
+
+        fin = disp & (oi_new >= self._n_ops_f[rw])
+        if fin.any():
+            done_f = self._done_f
+            done_f[rw] = done_f[rw] | fin
+            avail_f[rw] = avail_f[rw] & ~fin
+            np.copyto(self.last_wid, -1, where=fin)
+            for b in np.flatnonzero(fin):
+                self._handle_warp_done(b, int(widc[b]))
+        ep = disp & (self.li >= self.next_epoch)
+        if ep.any():
+            for b in np.flatnonzero(ep):
+                self._handle_epoch(b)
+        tl = disp & (self.instr >= self.window_mark)
+        if tl.any():
+            for b in np.flatnonzero(tl):
+                self._handle_timeline(b)
+        if fin.any():
+            for b in np.flatnonzero(fin):
+                if self.remaining[b] == 0:
+                    self._finalize(b)
+
+    def _np_mem_chain(self, mem, tok, widc, rw, cycle, new_ready):
+        """The fused per-access chain, vectorized over the batch axis.
+        Returns the updated new_ready; all state scatters happen here."""
+        cfg = self.cfg
+        line = tok >> _SHIFT
+        bypm = mem & self._byp_f[rw]
+        isom = mem & self._iso_f[rw] & ~bypm
+        norm = mem & ~bypm & ~isom
+        self.cnt_bypass += bypm
+        post = bypm.copy()
+        lat = np.zeros(self.B, np.int64)
+
+        # ---- L1 way scan: shared by the normal path (hit/miss) and the
+        # CIAO-P migration probe (residency == the scalar dict) ----
+        l1_sets = self.l1_sets
+        s1 = line % l1_sets
+        if self.xor_hash:
+            s1 = (s1 ^ ((line // l1_sets) % l1_sets)) % l1_sets
+        base1 = self._row_nf + s1 * self.l1_ways
+        way_idx = base1[:, None] + self._ar_ways
+        tags_f = self._l1_tags_f
+        eq = tags_f[way_idx] == line[:, None]
+        resident = eq.any(1)
+        f_hit = base1 + eq.argmax(1)
+
+        hit = norm & resident
+        miss = norm & ~resident
+        self.cnt_l1_hit += hit
+        self.cnt_l1_miss += miss
+        reused_f, stamp_f = self._l1_reused_f, self._l1_stamp_f
+        owners_f = self._l1_owners_f
+        if hit.any():
+            reused_f[f_hit] = reused_f[f_hit] | hit
+            stamp_f[f_hit] = np.where(hit, self.tick, stamp_f[f_hit])
+            lat = np.where(hit, cfg.lat_l1, lat)
+
+        # ---- CIAO-P smem region: evictions first (they insert into the
+        # VTA before the probe, unlike the L1 fill which inserts after) --
+        smiss = None
+        if isom.any():
+            rb = self.region_blocks
+            no_region = isom & (rb <= 0)
+            post |= no_region
+            iso2 = isom & ~no_region
+            sidx = line % np.maximum(rb, 1)
+            sflat = self._row_nrb + sidx
+            st_f, so_f = self._smem_tags_f, self._smem_owner_f
+            sold = st_f[sflat]
+            shit = iso2 & (sold == line)
+            self.cnt_smem_hit += shit
+            lat = np.where(shit, cfg.lat_smem, lat)
+            smiss = iso2 & ~shit
+            if smiss.any():
+                sevict = smiss & (sold >= 0)
+                self.cnt_smem_evictions += sevict
+                sown = so_f[sflat]
+                ins = sevict & (sown != widc)
+                if ins.any():
+                    self._np_vta_insert(ins, sown, sold, widc)
+            else:
+                smiss = None
+
+        # ---- VTA probe (after smem inserts, before L1-fill inserts) ----
+        pm = miss if smiss is None else miss | smiss
+        if pm.any():
+            sv = widc % self.v_sets
+            vslots = (self._row_vnf + sv * self.v_k)[:, None] + self._ar_vk
+            vhit = pm & (self._v_addr_f[vslots] == line[:, None]).any(1)
+            if vhit.any():
+                for b in np.flatnonzero(vhit):
+                    self._vta_probe_pop(b, int(widc[b]), int(line[b]))
+
+        # ---- L1 fill (miss path) ----
+        if miss.any():
+            vic = base1 + stamp_f[way_idx].argmin(1)
+            old = tags_f[vic]
+            oldown = owners_f[vic]
+            oldreu = reused_f[vic]
+            evict = miss & (old >= 0)
+            self.cnt_evictions += evict
+            ins = evict & (oldown != widc)
+            if self.reuse_filter:
+                ins &= oldreu
+            if ins.any():
+                self._np_vta_insert(ins, oldown, old, widc)
+            tags_f[vic] = np.where(miss, line, old)
+            owners_f[vic] = np.where(miss, widc, oldown)
+            reused_f[vic] = np.where(miss, False, oldreu)
+            stamp_f[vic] = np.where(miss, self.tick, stamp_f[vic])
+            post |= miss
+
+        # ---- smem migration / fill (after the probe, like the scalar) --
+        if smiss is not None:
+            mig = smiss & resident
+            if mig.any():
+                # single-copy coherence: pull the line out of L1D
+                tags_f[f_hit] = np.where(mig, -1, tags_f[f_hit])
+                owners_f[f_hit] = np.where(mig, -1, owners_f[f_hit])
+                self.cnt_smem_migrate += mig
+                lat = np.where(mig, cfg.lat_migrate, lat)
+            smiss2 = smiss & ~mig
+            self.cnt_smem_miss += smiss2
+            post |= smiss2
+            st_f[sflat] = np.where(smiss, line, sold)
+            so_f[sflat] = np.where(smiss, widc, so_f[sflat])
+
+        self.tick += norm
+
+        # ---- post-L1 stage: L2 tags + DRAM bandwidth queueing ----
+        if post.any():
+            b2 = self._row_l2nf + (line % self.l2_sets) * self.l2_ways
+            wi2 = b2[:, None] + self._ar_l2w
+            t2_f, st2_f = self._l2_tags_f, self._l2_stamp_f
+            eq2 = t2_f[wi2] == line[:, None]
+            l2res = eq2.any(1)
+            h2 = post & l2res
+            m2 = post & ~l2res
+            self.l2_hits += h2
+            lat = np.where(h2, cfg.lat_l2, lat)
+            f2 = b2 + eq2.argmax(1)
+            if m2.any():
+                vic2 = b2 + st2_f[wi2].argmin(1)
+                t2_f[vic2] = np.where(m2, line, t2_f[vic2])
+                self.l2_misses += m2
+                chf = self._row_ch + (line >> 2) % self.dram_channels
+                df_f = self._dram_free_f
+                free = df_f[chf]
+                start = np.maximum(cycle, free)
+                df_f[chf] = np.where(m2, start + self.dram_gap, free)
+                self.dram_requests += m2
+                lat = np.where(m2, cfg.lat_dram + start - cycle, lat)
+                f2 = np.where(m2, vic2, f2)
+            st2_f[f2] = np.where(post, self.l2_tick, st2_f[f2])
+            self.l2_tick += post
+
+        # ---- dependent use vs hit-under-miss pending queue ----
+        done_t = cycle + lat
+        dep = mem & ((tok & 1) == 1)
+        nondep = mem & ~dep
+        new_ready = np.where(dep, done_t, new_ready)
+        if nondep.any():
+            pbase = rw * self.P
+            prow = pbase[:, None] + self._ar_P
+            pend_f = self._pend_f
+            rows = pend_f[prow]
+            slot = rows.argmin(1)           # a stale (<= cycle) slot
+            pslot = pbase + slot
+            nv = np.where(nondep, done_t, pend_f[pslot])
+            pend_f[pslot] = nv
+            rows[self._arB, slot] = nv
+            valid = rows > cycle[:, None]
+            outstanding = valid.sum(1)
+            earliest = np.where(valid, rows, _HUGE).min(1)
+            new_ready = np.where(
+                nondep,
+                np.where(outstanding >= self.max_mlp, earliest, cycle + 1),
+                new_ready)
+        return new_ready
+
+    def _np_vta_insert(self, mask, owner, victim_line, evictor) -> None:
+        """Vectorized circular-FIFO insert (the caller has excluded
+        self-eviction). One insert per cell per iteration, so the fancy
+        scatters never collide."""
+        v_k = self.v_k
+        s = owner % self.v_sets
+        srow = self._row_vsets + s
+        head_f, count_f = self._v_head_f, self._v_count_f
+        h = head_f[srow]
+        cc = count_f[srow]
+        full = cc == v_k
+        slot = self._row_vnf + s * v_k + np.where(full, h, (h + cc) % v_k)
+        va_f, ve_f = self._v_addr_f, self._v_evic_f
+        va_f[slot] = np.where(mask, victim_line, va_f[slot])
+        ve_f[slot] = np.where(mask, evictor, ve_f[slot])
+        head_f[srow] = np.where(mask & full, (h + 1) % v_k, h)
+        count_f[srow] = np.where(mask & ~full, cc + 1, cc)
+        self.v_inserts += mask
+
+    # --------------------------------------------------------- C stepper
+    def _score_ptr_refresh(self, b: int) -> None:
+        ptrs = getattr(self, "_score_ptrs", None)
+        if ptrs is not None:
+            ptrs[b] = self.policies[b].score.ctypes.data
+
+    def _run_c(self, cstep) -> None:
+        self._score_ptrs = np.zeros(self.B, np.uint64)
+        bumps = np.zeros(self.B, np.int64)
+        for b, pol in enumerate(self.policies):
+            if isinstance(pol, CCWSPolicy):
+                self._score_ptrs[b] = pol.score.ctypes.data
+                bumps[b] = pol.bump
+        det_ptrs = np.zeros((self.B, 4), np.uint64)
+        for b, det in enumerate(self.dets):
+            det_ptrs[b, 0] = det.irs_hits.ctypes.data
+            det_ptrs[b, 1] = det.vta.hits.ctypes.data
+            det_ptrs[b, 2] = det.interfering_wid.ctypes.data
+            det_ptrs[b, 3] = det.sat_counter.ctypes.data
+        params = cstep.bind(self, det_ptrs, self._score_ptrs, bumps)
+        while bool(self.live.any()):
+            cstep.step(params)
+            self._drain_pauses()
+
+    def _drain_pauses(self) -> None:
+        for b in np.flatnonzero(self.pause):
+            flags = int(self.pause[b])
+            self.pause[b] = 0
+            if flags & P_THROTTLE:
+                self._handle_throttle(b)
+                continue
+            if flags & P_CAP:
+                self._finalize(b)
+                continue
+            if flags & P_WARPDONE:
+                # the stepper already flipped done/avail/last_wid
+                self._handle_warp_done(b, int(self.last_done_wid[b]))
+            if flags & P_EPOCH:
+                self._handle_epoch(b)
+            if flags & P_TIMELINE:
+                self._handle_timeline(b)
+            if flags & P_WARPDONE and self.remaining[b] == 0:
+                self._finalize(b)
+
+
+def run_batched(cells: Sequence[BatchCell],
+                cfg: Optional[SimConfig] = None,
+                backend: str = "auto",
+                timeline_every: int = 20_000) -> List[SimResult]:
+    """Convenience wrapper: build the engine, run to completion."""
+    return BatchedSMEngine(cells, cfg, backend).run(timeline_every)

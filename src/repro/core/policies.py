@@ -142,16 +142,23 @@ class CCWSPolicy(BasePolicy):
         # decay
         self.score = np.maximum(self.base,
                                 self.score - np.maximum(1, self.score // 8))
+        fin = np.asarray(finished, bool)
         if active is None:                  # simulator fast path: all warps
-            active = range(len(finished))
-        order = sorted((int(w) for w in active if not finished[w]),
-                       key=lambda w: -self.score[w])
+            act = np.arange(len(fin))
+        else:
+            act = np.asarray(list(active), np.int64)
+        alive = act[~fin[act]]
+        # stable argsort on -score == the old stable sorted(key=-score),
+        # minus the per-epoch Python key-lambda cost (this runs every 50
+        # instructions on the hot path)
+        order = alive[np.argsort(-self.score[alive], kind="stable")]
         self.blocked.clear()
         run_sum = 0
+        first = order[0] if len(order) else -1
         for w in order:
             run_sum += int(self.score[w])
-            if run_sum > self.budget and w != order[0]:
-                self.blocked.add(w)
+            if run_sum > self.budget and w != first:
+                self.blocked.add(int(w))
         m = np.ones(self.n, bool)
         if self.blocked:
             m[list(self.blocked)] = False

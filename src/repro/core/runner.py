@@ -6,17 +6,34 @@ Every benchmark used to hand-roll its own sweep loop around
 * :class:`ExperimentGrid` — a declarative spec: workload names, policy
   names, named :class:`SimConfig` variants, trace scale, base seed, and an
   optional multi-SM :class:`~repro.core.gpu.GPUConfig`.
-* :func:`run_grid` — expands the grid into cells, runs them serially or
-  fanned out over a ``multiprocessing`` pool (spawn context, so no JAX
-  fork hazards), and returns one :class:`RunRecord` per cell in grid
-  order. Workload traces are seeded from ``crc32(grid.seed, workload)``
-  only — every policy/variant of a workload sees identical traces, and
-  results are bit-identical between serial and parallel execution.
+* :func:`run_grid` — expands the grid into cells and runs them through
+  one of three engines (``engine=`` argument):
+
+  - ``"batched"`` — group compatible single-SM cells (same SimConfig,
+    batchable per :func:`repro.core.batched.supports_config`), dispatch
+    the groups to the :class:`~repro.core.batched.BatchedSMEngine`
+    lockstep engine in-process, and run whatever does not batch
+    (multi-SM chips, queued-L2/MSHR-gated variants) per cell. Best-SWL
+    / statPCAL offline limit sweeps are flattened into the batch (one
+    subcell per limit) and reduced afterwards.
+  - ``"process"`` — the spawn-pool fan-out (``processes`` workers, spawn
+    context so no JAX fork hazards), the pre-batched path.
+  - ``"auto"`` (default) — ``"batched"`` when at least
+    ``AUTO_MIN_BATCH`` cells are batchable, else ``"process"``.
+
+  Records come back in grid order either way, and results are
+  bit-identical across engines and parallelism (asserted in
+  ``tests/test_batched.py``). Workload traces are seeded from
+  ``crc32(grid.seed, workload)`` only — every policy/variant of a
+  workload sees identical traces.
 * :func:`save_records` / :func:`load_records` — JSON persistence; a
   reloaded file compares equal (``==``) to the in-memory records.
-
-Best-SWL / statPCAL cells run the paper's offline ``N_wrp`` limit sweep
-inside the cell (Table II), exactly like ``run_policy_sweep``.
+* an on-disk workload cache under ``results/workloads/`` (override via
+  ``$REPRO_WORKLOAD_CACHE_DIR``; empty disables): grid workers and the
+  batched group-builder ``load_workload`` instead of regenerating
+  (trace generation costs ~100ms/workload; an npz load is ~10x
+  cheaper), with atomic writes so concurrent spawn workers never see a
+  torn file.
 
 Example::
 
@@ -28,6 +45,7 @@ Example::
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import json
@@ -40,9 +58,13 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import SimConfig, run_policy_sweep
 from repro.workloads import WORKLOADS, make_workload
+from repro.workloads.io import load_workload, save_workload
 
 SCHEMA_VERSION = 1
 BASE_VARIANT = "base"
+ENGINES = ("auto", "batched", "process")
+# "auto" switches to the batched engine for grids at least this wide
+AUTO_MIN_BATCH = 8
 
 
 @dataclasses.dataclass
@@ -106,16 +128,47 @@ def workload_seed(base_seed: int, workload: str) -> int:
     return zlib.crc32(f"{base_seed}:{workload}".encode()) & 0x7FFFFFFF
 
 
-@functools.lru_cache(maxsize=32)
+def workload_cache_dir() -> Optional[pathlib.Path]:
+    """Directory of the on-disk workload cache (None = disabled)."""
+    val = os.environ.get("REPRO_WORKLOAD_CACHE_DIR", "results/workloads")
+    return pathlib.Path(val) if val else None
+
+
+@functools.lru_cache(maxsize=256)
 def _cached_workload(name: str, seed: int, scale: float):
-    """Per-process workload cache: a grid re-uses one workload across every
-    policy × variant cell (trace generation costs ~100ms per workload and
-    used to be repeated per cell). Safe to share because nothing mutates
-    trace arrays — the simulator compiles its own token streams and the
-    GPU model's address-offset copies allocate fresh arrays. Each spawn
-    worker keeps its own cache; ``pool.map`` chunks cells in grid order, so
-    same-workload cells land contiguously and hit it."""
-    return make_workload(name, seed=seed, scale=scale)
+    """Two-level workload cache.
+
+    In memory: a grid re-uses one workload across every policy × variant
+    cell (generation costs ~100ms per workload and used to be repeated
+    per cell); the 256-entry bound replaces the old 32, which thrashed
+    on grids wider than 32 workload cells. Safe to share because nothing
+    mutates trace arrays — the simulator compiles its own token streams
+    and the GPU model's address-offset copies allocate fresh arrays.
+
+    On disk: ``results/workloads/<name>-s<seed>-x<scale>.npz`` via the
+    versioned :mod:`repro.workloads.io` format, so spawn workers and the
+    batched group-builder load instead of regenerate. Writes go through
+    a per-pid temp file + ``os.replace`` (atomic), so concurrent workers
+    racing on the same cell never read a torn file; any cache I/O error
+    falls back to generation.
+    """
+    cache = workload_cache_dir()
+    path = None
+    if cache is not None:
+        path = cache / f"{name}-s{seed}-x{scale:g}.npz"
+        if path.exists():
+            with contextlib.suppress(Exception):
+                return load_workload(path)
+    wl = make_workload(name, seed=seed, scale=scale)
+    if path is not None:
+        tmp = cache / f".{name}-s{seed}-x{scale:g}.{os.getpid()}.tmp.npz"
+        try:
+            save_workload(wl, tmp)
+            os.replace(tmp, path)
+        except Exception:
+            with contextlib.suppress(OSError):
+                tmp.unlink()
+    return wl
 
 
 def _run_cell(cell: _Cell) -> RunRecord:
@@ -162,18 +215,135 @@ def expand_grid(grid: ExperimentGrid) -> List[_Cell]:
     return cells
 
 
+def _batchable(cell: _Cell) -> bool:
+    from repro.core.batched import supports_config
+    return cell.gpu is None and \
+        supports_config(cell.cfg if cell.cfg is not None else SimConfig())
+
+
+# token-plane budget per batched chunk: unique workloads are stacked
+# (B, num_warps, longest-stream) int64, so bound the padded plane
+_BATCH_TOKEN_BUDGET = 192 * 1024 * 1024
+_BATCH_MAX_CELLS = 256
+
+
+def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
+    """Run batchable cells through the lockstep engine: flatten Best-SWL
+    / statPCAL limit sweeps into per-limit subcells, group by SimConfig,
+    chunk groups under a token-plane memory budget, run each chunk as
+    one batch, and reduce the sweeps back (first-best on ties, exactly
+    like ``run_policy_sweep``)."""
+    from repro.core.batched import BatchCell, BatchedSMEngine
+    backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
+    # (cell index, limit ordinal, BatchCell); cfg key groups chunks
+    groups: Dict[str, List[Tuple[int, int, BatchCell]]] = {}
+    for i, cell in enumerate(cells):
+        wl = _cached_workload(cell.workload,
+                              workload_seed(cell.seed, cell.workload),
+                              cell.scale)
+        key = repr(cell.cfg) if cell.cfg is not None else "default"
+        sub = groups.setdefault(key, [])
+        if cell.policy in ("best-swl", "statpcal"):
+            limits = ([wl.n_wrp] if getattr(wl, "n_wrp", 0)
+                      else list(cell.best_swl_limits))
+            for j, lim in enumerate(limits):
+                sub.append((i, j, BatchCell(wl, cell.policy,
+                                            {"limit": lim})))
+        else:
+            sub.append((i, 0, BatchCell(wl, cell.policy)))
+
+    results: Dict[int, List] = {}
+    for key, sub in groups.items():
+        cfg = cells[sub[0][0]].cfg
+        for chunk in _chunk_batch(sub):
+            eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
+                                  backend=backend)
+            for (i, j, _), res in zip(chunk, eng.run()):
+                results.setdefault(i, []).append((j, res))
+
+    records = []
+    for i, cell in enumerate(cells):
+        sweep = sorted(results[i])
+        best = None
+        for _, res in sweep:
+            if best is None or res.ipc > best.ipc:
+                best = res
+        wl = _cached_workload(cell.workload,
+                              workload_seed(cell.seed, cell.workload),
+                              cell.scale)
+        records.append(RunRecord(
+            grid=cell.grid, workload=cell.workload, klass=wl.klass,
+            policy=cell.policy, variant=cell.variant, num_sms=1,
+            seed=cell.seed, scale=cell.scale,
+            ipc=best.ipc, cycles=best.cycles,
+            instructions=best.instructions,
+            l1_hit_rate=best.l1_hit_rate, vta_hits=best.vta_hits,
+            mean_active_warps=best.mean_active_warps,
+            stats=dict(best.stats),
+            pairs=[list(p) for p in best.pairs]))
+    return records
+
+
+def _chunk_batch(sub: Sequence[Tuple]) -> List[List[Tuple]]:
+    """Split one config group into engine-sized chunks: the stacked
+    token plane (unique workloads × num_warps × longest stream) stays
+    under ``_BATCH_TOKEN_BUDGET`` and chunks hold at most
+    ``_BATCH_MAX_CELLS`` cells. Cells arrive in grid order, so
+    same-workload cells stay contiguous and padding stays tight."""
+    chunks: List[List[Tuple]] = []
+    cur: List[Tuple] = []
+    uniq: set = set()
+    max_len = 1
+    for item in sub:
+        wl = item[2].workload
+        wid = id(wl)
+        new_uniq = uniq | {wid}
+        new_len = max(max_len,
+                      max((len(k) for k, _ in wl.traces), default=1))
+        est = len(new_uniq) * len(wl.traces) * new_len * 8
+        if cur and (len(cur) >= _BATCH_MAX_CELLS
+                    or est > _BATCH_TOKEN_BUDGET):
+            chunks.append(cur)
+            cur, uniq, max_len = [], set(), 1
+            new_uniq = {wid}
+            new_len = max((len(k) for k, _ in wl.traces), default=1)
+        cur.append(item)
+        uniq = new_uniq
+        max_len = new_len
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
 def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
-             json_path: Optional[str] = None) -> List[RunRecord]:
-    """Run every cell; ``processes`` > 1 fans out over a spawn pool.
-    Records come back in grid order regardless of execution order."""
+             json_path: Optional[str] = None,
+             engine: str = "auto") -> List[RunRecord]:
+    """Run every cell; see the module docstring for the three engines.
+    ``processes`` > 1 fans the process engine (and any cells the batched
+    engine cannot take) over a spawn pool. Records come back in grid
+    order regardless of execution order or engine."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
     cells = expand_grid(grid)
-    nproc = min(processes or 1, len(cells))
-    if nproc > 1:
-        ctx = multiprocessing.get_context("spawn")
-        with ctx.Pool(nproc) as pool:
-            records = pool.map(_run_cell, cells)
-    else:
-        records = [_run_cell(c) for c in cells]
+    records: List[Optional[RunRecord]] = [None] * len(cells)
+    if engine != "process":
+        batch_idx = [i for i, c in enumerate(cells) if _batchable(c)]
+        if engine == "batched" or len(batch_idx) >= AUTO_MIN_BATCH:
+            for i, rec in zip(batch_idx, _run_cells_batched(
+                    [cells[i] for i in batch_idx])):
+                records[i] = rec
+    rest = [i for i in range(len(cells)) if records[i] is None]
+    if rest:
+        nproc = min(processes or 1, len(rest))
+        if nproc > 1:
+            ctx = multiprocessing.get_context("spawn")
+            with ctx.Pool(nproc) as pool:
+                rest_records = pool.map(_run_cell,
+                                        [cells[i] for i in rest])
+        else:
+            rest_records = [_run_cell(cells[i]) for i in rest]
+        for i, rec in zip(rest, rest_records):
+            records[i] = rec
     if json_path:
         save_records(records, json_path, grid=grid)
     return records

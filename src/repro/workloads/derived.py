@@ -37,6 +37,20 @@ line, so a Pallas block of ``b`` rows is ``b`` consecutive lines.
 them like any other workload; ``scale`` shrinks tile sizes / sequence
 lengths rather than warp count, so contention structure survives at
 smoke scales.
+
+All three walks take an optional ``jitter`` knob (default 0.0 — **off is
+bit-exact**: no RNG stream is consumed, pinned by the golden cells and
+``tests/test_workloads.py``). Kernel-derived traces issue dense
+``MemBurst`` runs whose every 2nd op is a dependent use under
+``dep_every=2``, so with synchronized arrival the warps' MLP is capped
+in lockstep — one suspected cause of the PR-3 ranking gap (ROADMAP:
+derived traces favor GTO, tau ≈ -0.24). ``jitter=f`` prepends each warp
+a private ALU burst drawn uniformly from ``[0, f ×  warp-instructions)``
+(a dedicated RNG stream, so the walk itself is unchanged), staggering
+warp arrival the way real CTA rasterization does. The registry exposes
+jittered twins (``flashattn-jit`` etc., origin ``derived-jit``,
+``jitter=0.25``) and ``benchmarks/bench_workloads.py`` sweeps them as a
+third group next to synthetic/derived.
 """
 from __future__ import annotations
 
@@ -64,11 +78,30 @@ def _lines(base: int, start_row: int, rows: int) -> np.ndarray:
     return base + LINE * (start_row + np.arange(rows, dtype=np.int64))
 
 
+def _jitter_rng(seed: int, jitter: float):
+    """Dedicated arrival-jitter stream: None when the knob is off, so a
+    ``jitter=0`` build consumes no RNG and stays bit-exact."""
+    return np.random.default_rng([seed, 0x6A17]) if jitter else None
+
+
+def _with_jitter(segs: List, rng, jitter: float) -> Tuple:
+    """Prepend a per-warp ALU burst of up to ``jitter`` × the warp's own
+    instruction count, staggering arrival like CTA rasterization."""
+    if rng is None:
+        return tuple(segs)
+    n_inst = sum(s.n for s in segs)
+    skew = int(rng.integers(0, max(1, int(jitter * n_inst))))
+    if skew:
+        segs = [AluBurst(skew)] + segs
+    return tuple(segs)
+
+
 # ------------------------------------------------------------- flash attn
 def flashattn_workload(seed: int = 0, scale: float = 1.0, *,
                        heads: int = 4, q_blocks: int = 12,
                        block_rows: int = 16, causal: bool = True,
-                       window_blocks: int = 0) -> Workload:
+                       window_blocks: int = 0,
+                       jitter: float = 0.0) -> Workload:
     """One warp per (head, q-block) grid row (heads * q_blocks warps).
 
     Walks the kernel's KV-innermost grid: warp (h, qi) re-reads its Q
@@ -81,6 +114,7 @@ def flashattn_workload(seed: int = 0, scale: float = 1.0, *,
         raise ValueError("window_blocks requires causal=True")
     rows = max(2, int(block_rows * scale))
     seq_rows = q_blocks * rows
+    rng_j = _jitter_rng(seed, jitter)
     warps: List[Tuple] = []
     for h in range(heads):
         for qi in range(q_blocks):
@@ -96,7 +130,7 @@ def flashattn_workload(seed: int = 0, scale: float = 1.0, *,
                 step = np.concatenate([q_tile, k_tile, v_tile])
                 segs.append(MemBurst(len(step), Explicit.of(step)))
                 segs.append(AluBurst(3 * rows))
-            warps.append(tuple(segs))
+            warps.append(_with_jitter(segs, rng_j, jitter))
     spec = WorkloadSpec(
         "flashattn", "KRN", (PhaseSpec(tuple(warps)),),
         smem_used_bytes=int(0.50 * SMEM_TOTAL),   # (m, l, acc) scratch
@@ -108,14 +142,15 @@ def flashattn_workload(seed: int = 0, scale: float = 1.0, *,
 def decodeattn_workload(seed: int = 0, scale: float = 1.0, *,
                         num_heads: int = 48, block_rows: int = 16,
                         base_blocks: int = 10,
-                        long_every: int = 6, long_factor: int = 4
-                        ) -> Workload:
+                        long_every: int = 6, long_factor: int = 4,
+                        jitter: float = 0.0) -> Workload:
     """One warp per (batch*head) grid row. Per-sequence KV lengths are
     skewed: every ``long_every``-th head serves a ``long_factor``x longer
     context (the straggler sequences of a serving batch) — those heads
     stream far more KV lines and become the Fig. 4-style heavy
     interferers."""
     rng = np.random.default_rng(seed)
+    rng_j = _jitter_rng(seed, jitter)
     rows = max(2, int(block_rows * scale))
     max_blocks = base_blocks * long_factor
     cache_rows = max_blocks * rows                 # per-head KV stride
@@ -134,7 +169,7 @@ def decodeattn_workload(seed: int = 0, scale: float = 1.0, *,
             step = np.concatenate([q_line, k_tile, v_tile])
             segs.append(MemBurst(len(step), Explicit.of(step)))
             segs.append(AluBurst(rows))
-        warps.append(tuple(segs))
+        warps.append(_with_jitter(segs, rng_j, jitter))
     spec = WorkloadSpec(
         "decodeattn", "KRN", (PhaseSpec(tuple(warps)),),
         smem_used_bytes=int(0.25 * SMEM_TOTAL),   # (m, l, acc) scratch
@@ -180,13 +215,14 @@ def gather_index_stream(seed: int = 0, scale: float = 1.0, *,
 
 def gather_workload(seed: int = 0, scale: float = 1.0, *,
                     num_streams: int = 48, alu_chunk: int = 64,
-                    alu_len: int = 16) -> Workload:
+                    alu_len: int = 16, jitter: float = 0.0) -> Workload:
     """Per-warp view of the gather kernel: warp w issues stream w's
     requests in order (address = table row * LINE — one 32-fp32 row per
     line), with a short ALU burst every ``alu_chunk`` requests (the
     copy-out / index arithmetic between gathers)."""
     indices, streams, _iso = gather_index_stream(
         seed, scale, num_streams=num_streams)
+    rng_j = _jitter_rng(seed, jitter)
     warps: List[Tuple] = []
     for w in range(num_streams):
         addrs = _TABLE_BASE + LINE * indices[streams == w]
@@ -195,11 +231,14 @@ def gather_workload(seed: int = 0, scale: float = 1.0, *,
             chunk = addrs[i:i + alu_chunk]
             segs.append(MemBurst(len(chunk), Explicit.of(chunk)))
             segs.append(AluBurst(alu_len))
-        warps.append(tuple(segs))
+        warps.append(_with_jitter(segs, rng_j, jitter))
     spec = WorkloadSpec(
         "gather", "KRN", (PhaseSpec(tuple(warps)),),
         smem_used_bytes=0, apki=800)
     return compile_workload(spec, seed)
+
+
+JITTER_DEFAULT = 0.25
 
 
 def _register_derived() -> None:
@@ -212,6 +251,23 @@ def _register_derived() -> None:
     register_workload("gather", "KRN",
                       lambda seed, scale: gather_workload(seed, scale),
                       origin="derived")
+    # arrival-jittered twins (ROADMAP ranking-gap study, first step):
+    # separate origin so the plain derived group is unchanged
+    register_workload(
+        "flashattn-jit", "KRN",
+        lambda seed, scale: flashattn_workload(seed, scale,
+                                               jitter=JITTER_DEFAULT),
+        origin="derived-jit")
+    register_workload(
+        "decodeattn-jit", "KRN",
+        lambda seed, scale: decodeattn_workload(seed, scale,
+                                                jitter=JITTER_DEFAULT),
+        origin="derived-jit")
+    register_workload(
+        "gather-jit", "KRN",
+        lambda seed, scale: gather_workload(seed, scale,
+                                            jitter=JITTER_DEFAULT),
+        origin="derived-jit")
 
 
 _register_derived()

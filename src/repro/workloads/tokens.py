@@ -99,3 +99,46 @@ def decode_trace(tokens: Iterable[int]) -> Tuple[np.ndarray, np.ndarray]:
 def token_line(tok: int) -> int:
     """Cache-line index of a (non-negative) memory token."""
     return tok >> TOKEN_LINE_SHIFT
+
+
+def pad_token_streams(streams: Sequence[Sequence[int]],
+                      num_warps: int = 0,
+                      width: int = 0,
+                      fill: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad one cell's per-warp token streams into a rectangular plane.
+
+    Returns ``(tokens, lengths)``: ``tokens`` is ``(num_warps, width)``
+    int64 (warps/width default to the stream count / longest stream;
+    shorter streams are padded with ``fill``), ``lengths`` the per-warp
+    token counts. Consumers must guard reads with ``lengths`` — the fill
+    value is not a sentinel (0 is a valid memory token).
+    """
+    n = num_warps or len(streams)
+    lens = np.zeros(n, np.int64)
+    lens[:len(streams)] = [len(s) for s in streams[:n]]
+    w = width or (int(lens.max()) if n else 0)
+    toks = np.full((n, max(w, 1)), fill, np.int64)
+    for i, s in enumerate(streams[:n]):
+        if len(s) > w:
+            raise ValueError(f"stream {i} longer ({len(s)}) than width {w}")
+        toks[i, :len(s)] = s
+    return toks, lens
+
+
+def stack_token_streams(per_cell: Sequence[Sequence[Sequence[int]]],
+                        num_warps: int,
+                        fill: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack many cells' token streams into one ``(B, num_warps, width)``
+    batch plane (the batched engine's layout; ``width`` = longest stream
+    anywhere). Returns ``(tokens, lengths)`` with ``lengths`` shaped
+    ``(B, num_warps)``."""
+    b = len(per_cell)
+    w = max((len(s) for cell in per_cell for s in cell), default=0)
+    toks = np.full((b, num_warps, max(w, 1)), fill, np.int64)
+    lens = np.zeros((b, num_warps), np.int64)
+    for i, cell in enumerate(per_cell):
+        t, ln = pad_token_streams(cell, num_warps=num_warps,
+                                  width=max(w, 1), fill=fill)
+        toks[i] = t
+        lens[i] = ln
+    return toks, lens

@@ -1,8 +1,18 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
 only launch/dryrun.py forces the 512 placeholder devices (in its own
 process)."""
+import os
+import tempfile
+
 import jax
 import pytest
+
+# Isolate the on-disk workload cache (repro.core.runner): it is keyed by
+# (name, seed, scale) only, so a stale results/workloads/ entry from
+# before a generator edit would silently feed old traces into the suite.
+# A fresh per-session directory keeps tests self-contained.
+os.environ["REPRO_WORKLOAD_CACHE_DIR"] = tempfile.mkdtemp(
+    prefix="repro-wl-cache-")
 
 try:
     import hypothesis  # noqa: F401

@@ -1,0 +1,206 @@
+"""Batched lockstep engine equivalence: both steppers (numpy, C) must
+reproduce ``SMSimulator`` bit-for-bit, per cell, in mixed batches.
+
+Three layers of pinning:
+
+* the golden seed-core snapshots (``tests/golden/``) — all seven
+  single-SM cells run as ONE heterogeneous batch (mixed workloads,
+  policies, policy_kwargs) per backend; every numeric field must match
+  the snapshot exactly, like ``tests/test_equivalence.py`` does for the
+  scalar core. The 8th (2-SM GPU) cell is covered via the runner
+  fallback test below.
+* a hypothesis property: a batch-of-1 run is bit-identical to a fresh
+  ``SMSimulator`` for random registry workloads × policy families.
+* the runner: ``engine="batched"`` / ``"process"`` / ``"auto"`` produce
+  equal records on a grid that mixes batchable cells with a multi-SM
+  variant (exercising the per-cell fallback), and the Best-SWL limit
+  sweep reduces to the same winner.
+"""
+import dataclasses
+import gzip
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import _cstep
+from repro.core.batched import (BatchCell, BatchedSMEngine, run_batched,
+                                supports_config)
+from repro.core.simulator import SimConfig, SMSimulator
+from repro.workloads import make_workload
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "golden_cells.json.gz"
+
+BACKENDS = ["numpy"] + (["c"] if _cstep.available() else [])
+
+
+def _golden_sm_cells():
+    doc = json.loads(gzip.decompress(GOLDEN.read_bytes()).decode())
+    return [c for c in doc["cells"] if c["kind"] == "sm"]
+
+
+SIM_FIELDS = ("policy", "cycles", "instructions", "ipc", "l1_hit_rate",
+              "vta_hits", "mean_active_warps", "timeline", "pairs")
+
+
+def _assert_matches_golden(result, golden):
+    got = dataclasses.asdict(result)
+    got["timeline"] = [list(t) for t in got["timeline"]]
+    for field in SIM_FIELDS:
+        assert got[field] == golden[field], f"mismatch in {field}"
+    for key, val in golden["stats"].items():
+        assert got["stats"].get(key) == val, f"stat {key!r} mismatch"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_cells_one_mixed_batch(backend):
+    """All golden single-SM cells as one heterogeneous lockstep batch."""
+    cells = _golden_sm_cells()
+    wls = {}
+    batch = []
+    for c in cells:
+        key = (c["workload"], c["seed"], c["scale"])
+        if key not in wls:
+            wls[key] = make_workload(c["workload"], seed=c["seed"],
+                                     scale=c["scale"])
+        batch.append(BatchCell(wls[key], c["policy"],
+                               dict(c["policy_kwargs"])))
+    results = run_batched(batch, backend=backend)
+    for c, res in zip(cells, results):
+        _assert_matches_golden(res, c["result"])
+
+
+@pytest.mark.skipif(not _cstep.available(),
+                    reason=_cstep.unavailable_reason())
+def test_backends_agree_on_smem_paths():
+    """numpy vs C stepper on the CIAO-P smem redirection + bypass paths
+    (migration, smem evictions, statPCAL bypass) in one batch."""
+    wl = make_workload("nw", seed=11, scale=0.12)      # 35% smem app
+    wl2 = make_workload("syrk", seed=11, scale=0.12)
+    cells = [BatchCell(wl, "ciao-p"), BatchCell(wl, "ciao-c"),
+             BatchCell(wl2, "statpcal", {"limit": 2}),
+             BatchCell(wl2, "ciao-t")]
+    a = run_batched(cells, backend="numpy")
+    b = run_batched(cells, backend="c")
+    assert a == b
+
+
+def test_unsupported_config_rejected():
+    cfg = SimConfig(l2_bank_gap=4)
+    assert not supports_config(cfg)
+    wl = make_workload("syrk", seed=0, scale=0.05)
+    with pytest.raises(ValueError):
+        BatchedSMEngine([BatchCell(wl, "gto")], cfg)
+
+
+@pytest.mark.parametrize("cfg", [
+    SimConfig(max_cycles=20_000),               # cycle-cap exit path
+    SimConfig(num_warps=16, dep_every=3, max_mlp=2, dram_channels=2),
+    SimConfig(dep_every=0),                     # no dependent uses
+    SimConfig(l2_bytes=256, dram_channels=0),   # L2/DRAM clamp corners
+], ids=["cycle-cap", "small-sm", "no-dep", "clamps"])
+def test_config_corners_match_scalar(cfg):
+    wl = make_workload("bicg", seed=9, scale=0.15)
+    refs = [SMSimulator(wl, p, cfg).run() for p in ("gto", "ciao-c")]
+    for backend in BACKENDS:
+        got = BatchedSMEngine(
+            [BatchCell(wl, "gto"), BatchCell(wl, "ciao-c")], cfg,
+            backend=backend).run()
+        for r, g in zip(refs, got):
+            assert dataclasses.asdict(g) == dataclasses.asdict(r), backend
+
+
+POLICY_STRAT = st.sampled_from(
+    ["gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t", "ciao-c"])
+WORKLOAD_STRAT = st.sampled_from(
+    ["bicg", "kmn", "syrk", "gesummv", "backprop", "nw", "gather"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(WORKLOAD_STRAT, POLICY_STRAT, st.integers(0, 1000))
+def test_batch_of_one_matches_scalar(workload, policy, seed):
+    """Property: a batch-of-1 run is bit-identical to SMSimulator."""
+    wl = make_workload(workload, seed=seed, scale=0.06)
+    kwargs = {"limit": 4} if policy in ("best-swl", "statpcal") else None
+    ref = SMSimulator(wl, policy, policy_kwargs=kwargs).run()
+    for backend in BACKENDS:
+        got = run_batched([BatchCell(wl, policy, kwargs)],
+                          backend=backend)[0]
+        assert dataclasses.asdict(got) == dataclasses.asdict(ref), backend
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10**6))
+def test_mixed_batch_matches_scalar(seed):
+    """Property: cells keep their identity inside a shuffled batch —
+    every cell of a mixed batch equals its own scalar run."""
+    rng = np.random.default_rng(seed)
+    names = ["bicg", "syrk", "kmn", "conv2d"]
+    policies = ["gto", "ciao-c", "ciao-p", "ccws"]
+    wls = {n: make_workload(n, seed=seed % 997, scale=0.06)
+           for n in names}
+    cells = []
+    for _ in range(6):
+        n = names[int(rng.integers(len(names)))]
+        p = policies[int(rng.integers(len(policies)))]
+        cells.append((n, p))
+    batch = [BatchCell(wls[n], p) for n, p in cells]
+    for backend in BACKENDS:
+        got = run_batched(batch, backend=backend)
+        for (n, p), res in zip(cells, got):
+            ref = SMSimulator(wls[n], p).run()
+            assert dataclasses.asdict(res) == dataclasses.asdict(ref)
+
+
+# ---------------------------------------------------------------- runner
+def test_runner_engines_agree(tmp_path, monkeypatch):
+    """batched == process == auto records, including a multi-SM variant
+    cell that must fall back to per-cell execution, and Best-SWL cells
+    whose offline limit sweep the batched path flattens and reduces."""
+    monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path))
+    from repro.core.gpu import GPUConfig
+    from repro.core.runner import ExperimentGrid, run_grid
+    grid = ExperimentGrid(name="t", workloads=("syrk", "kmn"),
+                          policies=("gto", "ciao-c", "best-swl"),
+                          scale=0.06, best_swl_limits=(2, 8))
+    r_proc = run_grid(grid, engine="process")
+    r_batch = run_grid(grid, engine="batched")
+    r_auto = run_grid(grid, engine="auto")
+    assert r_proc == r_batch == r_auto
+
+    gpu_grid = ExperimentGrid(name="t2", workloads=("syrk",),
+                              policies=("gto", "ciao-c"), scale=0.06,
+                              gpu=GPUConfig(num_sms=2))
+    assert run_grid(gpu_grid, engine="batched") == \
+        run_grid(gpu_grid, engine="process")
+
+
+def test_workload_disk_cache_round_trip(tmp_path, monkeypatch):
+    """The on-disk cache returns workloads that simulate identically to
+    freshly generated ones (first call writes, second call loads)."""
+    monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path))
+    import repro.core.runner as runner
+    runner._cached_workload.cache_clear()
+    a = runner._cached_workload("syrk", 123, 0.06)
+    assert list(tmp_path.glob("*.npz")), "cache file not written"
+    runner._cached_workload.cache_clear()
+    b = runner._cached_workload("syrk", 123, 0.06)   # disk hit
+    ra = SMSimulator(a, "ciao-c").run()
+    rb = SMSimulator(b, "ciao-c").run()
+    assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+    runner._cached_workload.cache_clear()
+
+
+def test_numpy_fallback_when_cstep_disabled(monkeypatch):
+    """REPRO_NO_CSTEP forces the portable stepper through auto."""
+    wl = make_workload("syrk", seed=2, scale=0.05)
+    eng = BatchedSMEngine([BatchCell(wl, "gto")], backend="auto")
+    monkeypatch.setattr(_cstep, "_lib", None)
+    monkeypatch.setattr(_cstep, "_err", "forced off for test")
+    res = eng.run()
+    assert eng.backend == "numpy"
+    ref = SMSimulator(wl, "gto").run()
+    assert dataclasses.asdict(res[0]) == dataclasses.asdict(ref)
