@@ -1,34 +1,42 @@
-"""PR-4 grid-throughput harness: batched lockstep engine vs the PR-2
-spawn-pool path, written to ``BENCH_PR4.json`` at the repo root.
+"""PR-5 grid-throughput harness: batched lockstep engine vs the PR-2
+spawn-pool path, written to ``BENCH_PR5.json`` at the repo root.
 
-Measures end-to-end ``run_grid`` wall time on the single-SM fig8 grid
-(the paper's Fig. 8 policy × workload sweep) three ways, interleaved
+Measures end-to-end ``run_grid`` wall time on two grids, interleaved
 best-of-N in one process (the container's absolute speed drifts ~2x
 between sessions, so only same-run ratios are meaningful):
 
-* ``pool``          — ``engine="process"`` at ``--jobs`` workers (the
-                      PR-2 spawn-pool fan-out; default 2, the dev box's
-                      core count),
-* ``batched``       — ``engine="batched"`` with the auto backend (the C
-                      stepper when a compiler is available),
-* ``batched_numpy`` — the same engine forced onto the pure-numpy
-                      lockstep stepper (the portable fallback).
+* the single-SM **fig8** grid (the paper's Fig. 8 policy × workload
+  sweep), three ways — ``pool`` (``engine="process"`` at ``--jobs``
+  workers), ``batched`` (auto backend: the C stepper when a compiler is
+  available), and ``batched_numpy`` (the portable pure-numpy stepper);
+* a 2-SM shared-L2 **multi-SM** grid (the paper's multi-programmed
+  contention setup) — ``pool`` vs ``batched``, the configuration the
+  engine could not batch before PR 5.
 
 Every engine's records are asserted **equal** before any time is
 reported — the speedup is meaningless unless the grids agree cell for
 cell. The headline ratio is pool wall time / batched wall time, i.e.
 grid-sweep throughput in cells/sec.
 
+The batched runs also report a **time breakdown** (`breakdown`):
+``stepper_s`` (inside the C/numpy stepper), ``drain_s`` (vectorized
+pause-drain: epoch/policy math), ``engine_build_s`` (state stacking) and
+``group_build_s`` (workload load + sweep flattening + chunking) — so a
+future regression in the epoch path shows up as ``drain_s`` growth, not
+just a worse ratio.
+
 Usage::
 
     python -m benchmarks.bench_batched [--quick] [--repeats N]
                                        [--scale S] [--jobs N]
-                                       [--out BENCH_PR4.json]
+                                       [--out BENCH_PR5.json]
                                        [--floor-ratio R]
+                                       [--floor-multism R]
 
-``--floor-ratio R`` exits nonzero if the batched/pool throughput ratio
-falls below R — the CI guard against regressing the batched engine. A
-ratio, not an absolute rate, so noisy runners do not flap the job.
+``--floor-ratio R`` exits nonzero if the fig8 batched/pool throughput
+ratio falls below R — the CI guard against regressing the batched
+engine. ``--floor-multism`` guards the multi-SM ratio the same way.
+Ratios, not absolute rates, so noisy runners do not flap the job.
 """
 from __future__ import annotations
 
@@ -38,11 +46,11 @@ import os
 import pathlib
 import platform
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import emit, header
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
             "syrk", "gesummv", "syr2k", "ii",          # SWS
@@ -50,6 +58,8 @@ FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
 QUICK_SET = ("kmn", "bicg", "syrk", "gesummv", "conv2d", "nw")
 POLICIES = ("gto", "ccws", "best-swl", "statpcal", "ciao-p", "ciao-t",
             "ciao-c")
+MS_QUICK_SET = ("bicg", "syrk", "nw")
+MS_QUICK_POLICIES = ("gto", "ccws", "ciao-p", "ciao-c")
 
 
 def _grid(quick: bool, scale: float):
@@ -58,8 +68,18 @@ def _grid(quick: bool, scale: float):
                           workloads=QUICK_SET if quick else FULL_SET)
 
 
+def _ms_grid(quick: bool, scale: float):
+    from repro.core.gpu import GPUConfig
+    from repro.core.runner import ExperimentGrid
+    return ExperimentGrid(
+        name="fig8-2sm",
+        policies=MS_QUICK_POLICIES if quick else POLICIES,
+        workloads=MS_QUICK_SET if quick else QUICK_SET,
+        scale=scale, gpu=GPUConfig(num_sms=2))
+
+
 def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
-    from repro.core.runner import run_grid
+    from repro.core.runner import last_batched_perf, run_grid
     prev = os.environ.get("REPRO_BATCHED_BACKEND")
     if backend:
         os.environ["REPRO_BATCHED_BACKEND"] = backend
@@ -73,7 +93,41 @@ def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
                 os.environ.pop("REPRO_BATCHED_BACKEND", None)
             else:
                 os.environ["REPRO_BATCHED_BACKEND"] = prev
-    return {"wall_s": wall, "records": records}
+    perf = last_batched_perf() if engine == "batched" else {}
+    return {"wall_s": wall, "records": records, "perf": perf}
+
+
+def _measure(grid, runs, repeats: int, jobs: int, label: str) -> Dict:
+    """Interleaved best-of-N over the given (name, engine, backend)
+    runs; asserts every engine's records equal before reporting."""
+    walls: Dict[str, List[float]] = {name: [] for name, _, _ in runs}
+    breakdown: Dict[str, Dict] = {}
+    ref_records = None
+    for _ in range(repeats):
+        for name, engine, backend in runs:
+            r = _time_engine(grid, engine, jobs, backend)
+            if not walls[name] or r["wall_s"] < min(walls[name]):
+                if r["perf"]:
+                    breakdown[name] = r["perf"]
+            walls[name].append(r["wall_s"])
+            if ref_records is None:
+                ref_records = r["records"]
+            elif r["records"] != ref_records:
+                raise RuntimeError(
+                    f"{label}: engine {name!r} records diverge from the "
+                    "pool path — bit-exactness broken, timings are "
+                    "meaningless")
+    out: Dict = {"results": {}, "breakdown": breakdown}
+    n_cells = len(ref_records)
+    for name, ws in walls.items():
+        best = min(ws)
+        out["results"][name] = {
+            "wall_s": best, "cells_per_s": n_cells / best,
+            "all_walls_s": ws,
+        }
+        emit(f"batched/{label}/{name}", 0.0,
+             f"{n_cells / best:.2f}cells/s;wall={best:.2f}s")
+    return out
 
 
 def main() -> int:
@@ -86,11 +140,15 @@ def main() -> int:
                     help="trace scale (default 0.5, quick 0.2)")
     ap.add_argument("--jobs", type=int, default=2,
                     help="spawn-pool workers for the baseline")
-    ap.add_argument("--out", default="BENCH_PR4.json")
+    ap.add_argument("--out", default="BENCH_PR5.json")
     ap.add_argument("--floor-ratio", type=float, default=0.0,
-                    help="fail if batched/pool throughput ratio is below")
+                    help="fail if fig8 batched/pool ratio is below")
+    ap.add_argument("--floor-multism", type=float, default=0.0,
+                    help="fail if the multi-SM batched/pool ratio is below")
     ap.add_argument("--skip-numpy", action="store_true",
                     help="skip the pure-numpy stepper measurement")
+    ap.add_argument("--skip-multism", action="store_true",
+                    help="skip the 2-SM shared-L2 grid measurement")
     args = ap.parse_args()
     repeats = args.repeats or (1 if args.quick else 2)
     scale = args.scale or (0.2 if args.quick else 0.5)
@@ -119,23 +177,23 @@ def main() -> int:
             batch_size += 1     # n_wrp pins the sweep to one limit
     _cstep.available()
 
-    walls: Dict[str, List[float]] = {"pool": [], "batched": [],
-                                     "batched_numpy": []}
-    ref_records = None
-    for _ in range(repeats):
-        runs = [("batched", "batched", args.jobs, "auto"),
-                ("pool", "process", args.jobs, "")]
-        if not args.skip_numpy:
-            runs.append(("batched_numpy", "batched", args.jobs, "numpy"))
-        for name, engine, jobs, backend in runs:
-            r = _time_engine(grid, engine, jobs, backend)
-            walls[name].append(r["wall_s"])
-            if ref_records is None:
-                ref_records = r["records"]
-            elif r["records"] != ref_records:
-                raise RuntimeError(
-                    f"engine {name!r} records diverge from the pool path "
-                    "— bit-exactness broken, timings are meaningless")
+    runs = [("batched", "batched", "auto"), ("pool", "process", "")]
+    if not args.skip_numpy:
+        runs.append(("batched_numpy", "batched", "numpy"))
+    fig8 = _measure(grid, runs, repeats, args.jobs, "fig8")
+
+    ms: Optional[Dict] = None
+    ms_grid = None
+    if not args.skip_multism:
+        ms_grid = _ms_grid(args.quick, scale)
+        for cell in expand_grid(ms_grid):
+            _cached_workload(cell.workload,
+                             workload_seed(cell.seed, cell.workload),
+                             cell.scale)
+        ms = _measure(ms_grid,
+                      [("batched", "batched", "auto"),
+                       ("pool", "process", "")],
+                      repeats, args.jobs, "2sm")
 
     doc: Dict = {
         "schema": SCHEMA_VERSION,
@@ -153,44 +211,55 @@ def main() -> int:
         "batch_size": batch_size,
         "c_stepper": {"available": _cstep.available(),
                       "detail": _cstep.unavailable_reason()},
-        "results": {},
+        "results": fig8["results"],
+        "breakdown": fig8["breakdown"],
     }
-    for name, ws in walls.items():
-        if not ws:
-            continue
-        best = min(ws)
-        doc["results"][name] = {
-            "wall_s": best, "cells_per_s": n_cells / best,
-            "all_walls_s": ws,
+    if ms is not None:
+        doc["multi_sm"] = {
+            "grid": "fig8-2sm", "num_sms": 2,
+            "workloads": list(ms_grid.workloads),
+            "policies": list(ms_grid.policies),
+            "results": ms["results"], "breakdown": ms["breakdown"],
         }
-        emit(f"batched/{name}", 0.0,
-             f"{n_cells / best:.2f}cells/s;wall={best:.2f}s")
 
     ratio = doc["results"]["pool"]["wall_s"] / \
         doc["results"]["batched"]["wall_s"]
     np_r = doc["results"].get("batched_numpy")
+    ms_ratio = None
+    if ms is not None:
+        ms_ratio = ms["results"]["pool"]["wall_s"] / \
+            ms["results"]["batched"]["wall_s"]
     doc["headline"] = {
         "ratio_vs_pool": ratio,
         "numpy_ratio_vs_pool": (doc["results"]["pool"]["wall_s"]
                                 / np_r["wall_s"]) if np_r else None,
+        "multi_sm_ratio_vs_pool": ms_ratio,
         "note": "ratio = best-of-N interleaved pool/batched wall time on "
                 "the same grid, records asserted equal; absolute "
                 "cells/sec drifts with the container",
     }
     emit("batched/ratio", 0.0, f"{ratio:.2f}x")
+    if ms_ratio is not None:
+        emit("batched/ratio_2sm", 0.0, f"{ms_ratio:.2f}x")
 
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(doc, indent=1, sort_keys=True))
     emit("batched/json", 0.0, str(out))
 
+    fail = False
     if args.floor_ratio and ratio < args.floor_ratio:
         print(f"# FAIL: batched/pool ratio {ratio:.2f}x below floor "
               f"{args.floor_ratio:.2f}x")
-        return 1
-    if args.floor_ratio:
+        fail = True
+    elif args.floor_ratio:
         emit("batched/floor", 0.0,
              f"ok:{ratio:.2f}x>={args.floor_ratio:.2f}x")
-    return 0
+    if args.floor_multism and ms_ratio is not None \
+            and ms_ratio < args.floor_multism:
+        print(f"# FAIL: multi-SM batched/pool ratio {ms_ratio:.2f}x "
+              f"below floor {args.floor_multism:.2f}x")
+        fail = True
+    return 1 if fail else 0
 
 
 if __name__ == "__main__":

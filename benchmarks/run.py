@@ -14,8 +14,9 @@ smoke test.
 ``--engine`` picks the runner execution engine for the grid sweeps:
 ``batched`` forces the in-process batched lockstep engine
 (``repro.core.batched``), ``process`` the spawn-pool fan-out, and
-``auto`` (default) batches wide grids and falls back per cell for the
-rest (multi-SM cells always run per cell).
+``auto`` (default) batches wide grids — including multi-SM grids, which
+stack as (SM × cell) rows — and falls back per cell only for the
+queued-L2/MSHR-gated config corners.
 """
 from __future__ import annotations
 

@@ -25,7 +25,8 @@ enum {
     P_TIMELINE = 2,
     P_WARPDONE = 4,
     P_THROTTLE = 8,
-    P_CAP = 16
+    P_CAP = 16,   /* legacy: slice stops at the cycle cap use P_SLICE */
+    P_SLICE = 32  /* reached until[b] (slice boundary or cycle cap)   */
 };
 
 #define HUGE_T ((i64)1 << 62)
@@ -44,9 +45,9 @@ typedef struct {
     i64 max_mlp, low_epoch, max_cycles, line_shift;
     /* per-warp planes (B x n [x ...]) */
     i64 *ready, *toks, *op_idx, *n_ops, *pend;
-    i8 *done, *avail, *iso, *byp, *live;
-    i64 *u_of, *n_of, *region_blocks;
-    /* per-cell scalars */
+    i8 *done, *avail, *iso, *byp, *live, *runnable;
+    i64 *u_of, *n_of, *region_blocks, *mem_of, *until;
+    /* per-row scalars */
     i64 *cycle, *instr, *li, *next_epoch, *window_mark;
     i64 *last_wid, *tick, *l2_tick;
     /* cache planes */
@@ -60,6 +61,7 @@ typedef struct {
     i64 *cnt_l1_hit, *cnt_l1_miss, *cnt_smem_hit, *cnt_smem_miss;
     i64 *cnt_smem_migrate, *cnt_bypass, *cnt_evictions;
     i64 *cnt_smem_evictions, *cnt_vta_hits, *vta_hit_events;
+    i64 *cnt_dram_reqs;   /* per-row; dram_requests is per hierarchy */
     /* control */
     i64 *pause, *last_done_wid;
     /* detector hooks: det_ptrs[b*4 + {irs_hits, vta_hits, interf, sat}];
@@ -176,20 +178,25 @@ static void run_cell(const Params *p, i64 b)
     i8 *l1_reused = p->l1_reused + b * p->nf;
     i64 *smem_tags = p->smem_tags + b * p->nrb;
     i64 *smem_owner = p->smem_owner + b * p->nrb;
-    i64 *l2_tags = p->l2_tags + b * p->l2nf;
-    i64 *l2_stamp = p->l2_stamp + b * p->l2nf;
-    i64 *dram_free = p->dram_free + b * p->dram_channels;
+    /* post-L1 planes are per hierarchy: rows of a multi-SM cell share
+     * them (only one SM phase is runnable at a time, so the cached
+     * l2_tick never races another row) */
+    const i64 m = p->mem_of[b];
+    i64 *l2_tags = p->l2_tags + m * p->l2nf;
+    i64 *l2_stamp = p->l2_stamp + m * p->l2nf;
+    i64 *dram_free = p->dram_free + m * p->dram_channels;
     i64 *score = p->score_ptrs[b]
         ? (i64 *)(uintptr_t)p->score_ptrs[b] : (i64 *)0;
     i64 cycle = p->cycle[b], li = p->li[b], instr = p->instr[b];
     i64 last_wid = p->last_wid[b];
-    i64 tick = p->tick[b], l2_tick = p->l2_tick[b];
+    i64 tick = p->tick[b], l2_tick = p->l2_tick[m];
     i64 rb = p->region_blocks[b];
+    const i64 until = p->until[b];
     i64 flags = 0;
 
     for (;;) {
-        if (cycle >= p->max_cycles) {
-            flags = P_CAP;
+        if (cycle >= until) { /* slice boundary / cycle cap */
+            flags = P_SLICE;
             break;
         }
         /* pick a warp: greedy (keep last), else oldest ready & allowed */
@@ -212,9 +219,11 @@ static void run_cell(const Params *p, i64 b)
                     flags = P_THROTTLE;
                     break;
                 }
-                if (best >= p->max_cycles) {
-                    cycle = p->max_cycles;
-                    flags = P_CAP;
+                if (best >= until) {
+                    /* clamp to the slice boundary, like the scalar
+                     * advance(); the next phase resumes from here */
+                    cycle = until;
+                    flags = P_SLICE;
                     break;
                 }
                 cycle = best;
@@ -324,7 +333,8 @@ static void run_cell(const Params *p, i64 b)
                     i64 start = cycle > dram_free[ch] ? cycle
                                                       : dram_free[ch];
                     dram_free[ch] = start + p->dram_gap;
-                    p->dram_requests[b] += 1;
+                    p->dram_requests[m] += 1;
+                    p->cnt_dram_reqs[b] += 1;
                     lat = p->lat_dram + start - cycle;
                 }
                 l2_stamp[f2] = l2_tick++;
@@ -382,13 +392,13 @@ static void run_cell(const Params *p, i64 b)
     p->instr[b] = instr;
     p->last_wid[b] = last_wid;
     p->tick[b] = tick;
-    p->l2_tick[b] = l2_tick;
+    p->l2_tick[m] = l2_tick;
 }
 
 void step_cells(const Params *p)
 {
     for (i64 b = 0; b < p->B; b++) {
-        if (!p->live[b] || p->pause[b])
+        if (!p->live[b] || !p->runnable[b] || p->pause[b])
             continue;
         run_cell(p, b);
     }

@@ -48,9 +48,10 @@ class Params(ctypes.Structure):
         ("ready", _p_i64), ("toks", _p_i64), ("op_idx", _p_i64),
         ("n_ops", _p_i64), ("pend", _p_i64),
         ("done", _p_i8), ("avail", _p_i8), ("iso", _p_i8),
-        ("byp", _p_i8), ("live", _p_i8),
+        ("byp", _p_i8), ("live", _p_i8), ("runnable", _p_i8),
         ("u_of", _p_i64), ("n_of", _p_i64), ("region_blocks", _p_i64),
-        # per-cell scalars
+        ("mem_of", _p_i64), ("until", _p_i64),
+        # per-row scalars
         ("cycle", _p_i64), ("instr", _p_i64), ("li", _p_i64),
         ("next_epoch", _p_i64), ("window_mark", _p_i64),
         ("last_wid", _p_i64), ("tick", _p_i64), ("l2_tick", _p_i64),
@@ -69,6 +70,7 @@ class Params(ctypes.Structure):
         ("cnt_smem_migrate", _p_i64), ("cnt_bypass", _p_i64),
         ("cnt_evictions", _p_i64), ("cnt_smem_evictions", _p_i64),
         ("cnt_vta_hits", _p_i64), ("vta_hit_events", _p_i64),
+        ("cnt_dram_reqs", _p_i64),
         # control
         ("pause", _p_i64), ("last_done_wid", _p_i64),
         # detector hooks
@@ -97,7 +99,8 @@ def _load() -> None:
         src = src_path.read_bytes()
         tag = hashlib.sha256(src).hexdigest()[:16]
         cache_dir = pathlib.Path(
-            os.environ.get("REPRO_CSTEP_CACHE") or tempfile.gettempdir())
+            os.environ.get("REPRO_CSTEP_CACHE")
+            or tempfile.gettempdir()).expanduser()
         cache_dir.mkdir(parents=True, exist_ok=True)
         so = cache_dir / f"repro_cstep_{tag}.so"
         if not so.exists():
@@ -169,8 +172,10 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
         _i64(eng.op_idx), _i64(eng.n_ops), _i64(eng.pend)
     p.done, p.avail = _i8(eng.done), _i8(eng.avail)
     p.iso, p.byp, p.live = _i8(eng.iso), _i8(eng.byp), _i8(eng.live)
+    p.runnable = _i8(eng.runnable)
     p.u_of, p.n_of = _i64(eng.u_of), _i64(eng.n_of)
     p.region_blocks = _i64(eng.region_blocks)
+    p.mem_of, p.until = _i64(eng.mem_of), _i64(eng.until)
     p.cycle, p.instr, p.li = \
         _i64(eng.cycle), _i64(eng.instr), _i64(eng.li)
     p.next_epoch, p.window_mark = \
@@ -194,6 +199,7 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
                  "vta_hits"):
         setattr(p, "cnt_" + name, _i64(getattr(eng, "cnt_" + name)))
     p.vta_hit_events = _i64(eng.vta_hit_events)
+    p.cnt_dram_reqs = _i64(eng.cnt_dram_reqs)
     p.pause, p.last_done_wid = _i64(eng.pause), _i64(eng.last_done_wid)
     p.det_ptrs = det_ptrs.ctypes.data_as(_p_u64)
     p.score_ptrs = score_ptrs.ctypes.data_as(_p_u64)

@@ -1,4 +1,4 @@
-"""Batched lockstep SM engine: B independent grid cells as one program.
+"""Batched lockstep SM engine: whole experiment grids as one program.
 
 The scalar core (:mod:`repro.core.simulator`) hit the measured ceiling of
 a per-cell CPython dispatch loop; every figure sweep, though, runs dozens
@@ -8,51 +8,74 @@ state ``SMSimulator`` keeps as scalars/lists — warp cursors, token
 streams (padded/stacked via :func:`repro.workloads.tokens.
 stack_token_streams`), L1/smem tag planes, VTA FIFOs, policy masks,
 detector counters, L2 tags and DRAM queues — along a leading batch axis,
-and advances B homogeneous cells (same :class:`SimConfig`) together.
+and advances all rows of a homogeneous group (same :class:`SimConfig`)
+together.
 
 Two interchangeable steppers drive the *same* stacked arrays:
 
-* ``numpy`` — the lockstep stepper: one scheduler dispatch per live cell
+* ``numpy`` — the lockstep stepper: one scheduler dispatch per live row
   per iteration, the full per-access chain (greedy/oldest pick, L1D way
   scan, VTA insert, L2 tags, DRAM queueing, MLP pending queues) as
-  masked vectorized updates, so one ``np.take``/fancy-scatter chain
-  replaces B Python dispatch iterations. Runs everywhere.
+  masked vectorized updates. Runs everywhere.
 * ``c`` — the same per-dispatch state machine transliterated to C
   (thread-free, int64 only), compiled on demand with the system C
   compiler via :mod:`repro.core._cstep` and driven through ``ctypes``
-  over the identical array layout. This retires the ROADMAP
-  "C-extension experiment for the dispatch loop" item; when no compiler
-  is available the engine silently uses the numpy stepper.
+  over the identical array layout. When no compiler is available the
+  engine silently uses the numpy stepper.
 
 ``backend="auto"`` picks ``c`` when available. Both steppers are
-**bit-exact per cell** against ``SMSimulator``: every floating-point
-quantity (IRS snapshots, timeline IPC windows, DRAM utilization) and
-every policy/detector *decision* is computed in Python against the real
-per-cell :class:`~repro.core.policies.BasePolicy` /
-:class:`~repro.core.interference.InterferenceDetector` objects — the
-steppers pause a cell whenever it reaches an epoch boundary, a warp
-completion, a timeline sample, or a fully-throttled stretch, and shared
-Python handlers replay exactly what the scalar loop does at those
-points. Only the deterministic integer per-dispatch chain is
-vectorized/compiled. ``tests/test_batched.py`` pins both steppers
-against the golden cells and property-tests batch-of-1 equality.
+**bit-exact per cell** against ``SMSimulator``/``GPUSimulator``: only
+the deterministic integer per-dispatch chain runs inside a stepper —
+rows pause at epoch boundaries, warp completions, timeline samples,
+fully-throttled stretches and slice boundaries, and the epoch-boundary
+decision math (detector IRS snapshots, all seven policy families'
+``epoch_tick``) is serviced by ONE vectorized pass per pause-drain over
+the stacked planes, using the same :mod:`repro.core.epoch` kernels the
+scalar objects delegate to with ``B == 1``. The per-cell detector and
+policy objects are re-pointed at rows of those planes (``adopt_*``), so
+object reads and kernel writes share memory and remain the single
+implementation. ``tests/test_batched.py`` pins both steppers against
+the golden cells; ``tests/test_epoch.py`` property-tests the kernels.
 
-Not every cell batches: multi-SM chips need interleaved stepping, and
-two scalar-core configuration corners (queued L2 banks, MSHR occupancy
-gating) are modeled through object methods the steppers do not
-replicate. :func:`supports_config` is the gate; the runner
-(:mod:`repro.core.runner`) falls back to per-cell execution for those.
+**Epoch next-trigger tables.** Policies that keep the base no-op
+``epoch_tick`` (GTO, Best-SWL) park their epoch trigger at infinity.
+CIAO cells whose reactivation stacks are empty have provably no-op
+low-cutoff epochs (Algorithm 1 lines 4-19 touch nothing, and the
+low-window IRS snapshot feeds no decision), so their next trigger is
+precomputed at the next *high*-cutoff boundary — the steppers run
+straight through the 20 intervening low epochs instead of pausing into
+Python for each. Stacks only grow at high-epoch actions, so the table
+is exact; it is rebuilt after every serviced epoch.
+
+**Multi-SM grids** batch too: a ``GPUConfig`` stacks each cell as
+``num_sms`` rows — the same per-SM trace slices
+:func:`repro.core.gpu.sm_subworkloads` gives ``GPUSimulator`` — whose
+post-L1 planes (L2 tags, DRAM channel queues, the chip-wide request
+counter) are shared through a row -> hierarchy indirection (``mem_of``).
+Rows replay the scalar chip's slice-interleaved schedule exactly: SM 0
+of every cell advances to the slice boundary, then SM 1, ...; rows of
+different cells share nothing and run concurrently inside a phase.
+
+Not every cell batches: two scalar-core configuration corners (queued
+L2 banks, MSHR occupancy gating) are modeled through object methods the
+steppers do not replicate. :func:`supports_config` is the gate; the
+runner (:mod:`repro.core.runner`) falls back to per-cell execution for
+those.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import epoch as _epoch
+from repro.core.gpu import GPUConfig, GPUResult, sm_subworkloads
 from repro.core.interference import InterferenceDetector
 from repro.core.onchip import LINE, SMMT
-from repro.core.policies import BasePolicy, CCWSPolicy, make_policy
+from repro.core.policies import (BasePolicy, CCWSPolicy, CIAOPolicy,
+                                 StatPCALPolicy, make_policy)
 from repro.core.simulator import SimConfig, SimResult, _HUGE
 from repro.workloads import tokens as _tokens
 
@@ -63,44 +86,58 @@ P_EPOCH = 1
 P_TIMELINE = 2
 P_WARPDONE = 4
 P_THROTTLE = 8
-P_CAP = 16
+P_CAP = 16          # legacy alias: a slice stop at the cycle cap
+P_SLICE = 32
+
+# policy families for the vectorized epoch dispatch
+F_PASSIVE = 0       # no-op epoch_tick (GTO, Best-SWL): never pauses
+F_CCWS = 1
+F_STATP = 2
+F_CIAO = 3
+F_OBJECT = 4        # unknown subclass: per-cell object fallback
 
 
-def supports_config(cfg: SimConfig) -> bool:
+def supports_config(cfg: SimConfig, gpu: Optional[GPUConfig] = None) -> bool:
     """Can the batched engine reproduce this config bit-exactly?
 
     The scalar core's fused fast path requires an unqueued L2
     (``l2_bank_gap == 0``) and no MSHR occupancy gating; those corners go
     through object methods (``MemoryHierarchy.access`` / ``MSHR.admit``)
-    that the steppers do not replicate.
-    """
+    that the steppers do not replicate. Multi-SM chips (``gpu``) batch
+    under the same conditions — the shared post-L1 stage is stacked as
+    per-hierarchy planes and the slice-interleaved SM schedule is
+    replayed exactly."""
     return cfg.l2_bank_gap == 0 and not cfg.onchip.mshr_gate
 
 
 @dataclasses.dataclass
 class BatchCell:
-    """One grid cell: a workload under one policy. The config is shared
-    by the whole batch (homogeneous-group contract)."""
+    """One grid cell: a workload under one policy. The config (and GPU
+    shape, if any) is shared by the whole batch (homogeneous-group
+    contract)."""
     workload: Any
     policy: str
     policy_kwargs: Optional[dict] = None
 
 
 class BatchedSMEngine:
-    """Run B single-SM cells to completion in lockstep.
+    """Run B cells (single-SM, or ``gpu.num_sms`` rows each) to
+    completion in lockstep.
 
     Usage::
 
-        results = BatchedSMEngine(cells, cfg).run()   # List[SimResult]
+        results = BatchedSMEngine(cells, cfg).run()      # List[SimResult]
+        results = BatchedSMEngine(cells, cfg, gpu=g).run()  # List[GPUResult]
     """
 
     timeline_every: int = 20_000
 
     def __init__(self, cells: Sequence[BatchCell],
                  cfg: Optional[SimConfig] = None,
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 gpu: Optional[GPUConfig] = None):
         self.cfg = cfg = cfg if cfg is not None else SimConfig()
-        if not supports_config(cfg):
+        if not supports_config(cfg, gpu):
             raise ValueError(
                 "config not supported by the batched engine "
                 "(l2_bank_gap != 0 or mshr_gate); use SMSimulator")
@@ -108,19 +145,44 @@ class BatchedSMEngine:
             raise ValueError(f"unknown backend {backend!r}")
         self._backend_req = backend
         self.cells = list(cells)
-        self.B = len(self.cells)
-        if not self.B:
+        self.gpu = gpu
+        self.S = gpu.num_sms if gpu is not None else 1
+        self.n_cells = len(self.cells)
+        if not self.n_cells:
             raise ValueError("empty batch")
+        self.B = self.n_cells * self.S        # rows
+        # time-breakdown accumulators (seconds); for the C path stepper
+        # and drain are disjoint, for numpy drain is a subset of stepper
+        self.perf: Dict[str, float] = {"build_s": 0.0, "stepper_s": 0.0,
+                                       "drain_s": 0.0, "rounds": 0.0}
+        t0 = time.perf_counter()
         self._build_state()
+        self.perf["build_s"] = time.perf_counter() - t0
 
     # ------------------------------------------------------------ set-up
+    def _row_workloads(self) -> List[Any]:
+        """One trace-carrying workload per row: the cell's workload for
+        single-SM batches, its per-SM slices for multi-SM batches."""
+        if self.gpu is None:
+            return [cell.workload for cell in self.cells]
+        subs_of: Dict[int, List[Any]] = {}
+        rows: List[Any] = []
+        for cell in self.cells:
+            wl = cell.workload
+            subs = subs_of.get(id(wl))
+            if subs is None:
+                subs = subs_of[id(wl)] = sm_subworkloads(wl, self.gpu)
+            rows.extend(subs)
+        return rows
+
     def _build_state(self) -> None:
         cfg = self.cfg
-        B = self.B
+        B, S = self.B, self.S
         oc = cfg.onchip
         dcfg = cfg.detector
         self.n_warps = n = cfg.num_warps
         self.low_epoch = dcfg.low_epoch
+        self.high_epoch = dcfg.high_epoch
         self.max_mlp = cfg.max_mlp
         self.max_cycles = cfg.max_cycles
         self.l1_sets, self.l1_ways = oc.num_sets, oc.ways
@@ -138,45 +200,64 @@ class BatchedSMEngine:
         vnf = self.v_sets * self.v_k
         l2nf = self.l2_sets * self.l2_ways
         P = self.max_mlp + 1
+        i64, b8 = np.int64, np.bool_
 
-        # per-cell objects: the decision logic (policies, detector floats)
-        # is NOT re-implemented — the steppers call into these
+        # row -> cell / hierarchy / SM-phase indirection: multi-SM rows
+        # of one cell share a post-L1 hierarchy plane (mem_of) and are
+        # stepped one SM phase at a time
+        self.cell_of = np.repeat(np.arange(self.n_cells, dtype=i64), S)
+        self.sm_of = np.tile(np.arange(S, dtype=i64), self.n_cells)
+        self.mem_of = self.cell_of if S > 1 else np.arange(B, dtype=i64)
+        self.M = self.n_cells if S > 1 else B
+        self._phase_rows = [np.flatnonzero(self.sm_of == k)
+                            for k in range(S)]
+
+        # per-row objects: the decision logic lives in the shared epoch
+        # planes; the objects are row views over them (adopt_* below)
         self.dets: List[InterferenceDetector] = []
         self.policies: List[BasePolicy] = []
-        self.n_of = np.zeros(B, np.int64)
-        self.region_blocks = np.zeros(B, np.int64)
-        streams_per_cell: List[List[List[int]]] = []
-        uniq: Dict[int, int] = {}          # id(workload) -> u index
-        self.u_of = np.zeros(B, np.int64)
-        for b, cell in enumerate(self.cells):
-            wl = cell.workload
+        self.n_of = np.zeros(B, i64)
+        self.region_blocks = np.zeros(B, i64)
+        streams_per_row: List[List[List[int]]] = []
+        uniq: Dict[Tuple[int, int], int] = {}   # (id(wl), sm) -> u index
+        self.u_of = np.zeros(B, i64)
+        row_wls = self._row_workloads()
+        rb_of: Dict[int, int] = {}
+        for b in range(B):
+            wl = row_wls[b]
+            cell = self.cells[int(self.cell_of[b])]
             det = InterferenceDetector(dcfg)
             self.dets.append(det)
             self.policies.append(make_policy(
                 cell.policy, n, det, **(cell.policy_kwargs or {})))
             self.n_of[b] = min(n, len(wl.traces))
             # CIAO-P region size exactly as OnChipMemory.__init__ does it
-            smmt = SMMT(oc.smem_bytes)
-            if wl.smem_used_bytes:
-                smmt.allocate("app", wl.smem_used_bytes)
-            _, size = smmt.reserve_unused()
-            self.region_blocks[b] = size // (LINE + 4)
-            u = uniq.get(id(wl))
+            rb = rb_of.get(wl.smem_used_bytes)
+            if rb is None:
+                smmt = SMMT(oc.smem_bytes)
+                if wl.smem_used_bytes:
+                    smmt.allocate("app", wl.smem_used_bytes)
+                _, size = smmt.reserve_unused()
+                rb = rb_of[wl.smem_used_bytes] = size // (LINE + 4)
+            self.region_blocks[b] = rb
+            key = (id(self.cells[int(self.cell_of[b])].workload),
+                   int(self.sm_of[b]))
+            u = uniq.get(key)
             if u is None:
-                u = uniq[id(wl)] = len(streams_per_cell)
-                streams_per_cell.append(_tokens.encode_workload(
+                u = uniq[key] = len(streams_per_row)
+                streams_per_row.append(_tokens.encode_workload(
                     wl.traces, cfg.dep_every, n))
             self.u_of[b] = u
-        # token streams stacked once per distinct workload (cells of the
-        # same workload share rows through u_of)
+        # token streams stacked once per distinct (workload, SM) slice
+        # (rows of the same slice share planes through u_of)
         self.toks, n_ops_u = _tokens.stack_token_streams(
-            streams_per_cell, n)
+            streams_per_row, n)
         self.L = self.toks.shape[2]
-        self.n_ops = n_ops_u[self.u_of]            # (B, n) per-cell copy
+        self.n_ops = n_ops_u[self.u_of]            # (B, n) per-row copy
+
         nrb = max(int(self.region_blocks.max()), 1)
 
-        # ---- stacked hot state (one row per cell) ----
-        i64, b8 = np.int64, np.bool_
+        # ---- stacked hot state (one row per SM) ----
         self.ready = np.zeros((B, n), i64)
         self.done = self.n_ops == 0                # includes padded warps
         self.avail = np.zeros((B, n), b8)
@@ -193,17 +274,6 @@ class BatchedSMEngine:
         self.li = np.zeros(B, i64)
         self.irs_off = np.zeros(B, i64)
         self.last_wid = np.full(B, -1, i64)
-        # cells whose policy keeps the base no-op epoch_tick (GTO,
-        # Best-SWL) have NO observable epoch behavior — the scalar loop's
-        # epoch block only syncs detector counters nothing reads and
-        # calls a pass. Park their epoch trigger at infinity so the
-        # steppers never pause them for it (finalize still syncs the
-        # detector mirrors).
-        passive = np.asarray(
-            [type(p).epoch_tick is BasePolicy.epoch_tick
-             for p in self.policies], bool)
-        self.next_epoch = np.where(passive, _HUGE,
-                                   self.low_epoch).astype(i64)
         self.window_mark = np.full(B, self.timeline_every, i64)
         self.last_instr = np.zeros(B, i64)
         self.last_cycle = np.zeros(B, i64)
@@ -221,13 +291,17 @@ class BatchedSMEngine:
         self.v_head = np.zeros((B, self.v_sets), i64)
         self.v_count = np.zeros((B, self.v_sets), i64)
         self.v_inserts = np.zeros(B, i64)
-        self.l2_tags = np.full((B, l2nf), -1, i64)
-        self.l2_stamp = np.zeros((B, l2nf), i64)
-        self.l2_tick = np.ones(B, i64)             # LRUTags._tick
+        # post-L1 planes are per *hierarchy* (per cell for multi-SM),
+        # addressed through mem_of; pure stat counters stay per row
+        M = self.M
+        self.l2_tags = np.full((M, l2nf), -1, i64)
+        self.l2_stamp = np.zeros((M, l2nf), i64)
+        self.l2_tick = np.ones(M, i64)             # LRUTags._tick
         self.l2_hits = np.zeros(B, i64)
         self.l2_misses = np.zeros(B, i64)
-        self.dram_free = np.zeros((B, self.dram_channels), i64)
-        self.dram_requests = np.zeros(B, i64)
+        self.dram_free = np.zeros((M, self.dram_channels), i64)
+        self.dram_requests = np.zeros(M, i64)      # chip-wide (feeds util)
+        self.cnt_dram_reqs = np.zeros(B, i64)      # per-SM (SimResult stat)
         for name in ("l1_hit", "l1_miss", "smem_hit", "smem_miss",
                      "smem_migrate", "bypass", "evictions",
                      "smem_evictions", "vta_hits"):
@@ -235,7 +309,65 @@ class BatchedSMEngine:
         self.vta_hit_events = np.zeros(B, i64)
         self.pause = np.zeros(B, i64)
         self.live = np.ones(B, b8)
+        # rows become runnable only inside their SM phase (_run_sliced);
+        # after every phase the set drains back to all-False
+        self.runnable = np.zeros(B, b8)
+        self.until = np.full(B, self.max_cycles, i64)
         self.nf, self.vnf, self.l2nf = nf, vnf, l2nf
+
+        # ---- epoch planes: detector + policy state, adopted row-wise ----
+        self.det_pl = _epoch.DetPlanes.alloc(B, dcfg)
+        self.allowed_pl = np.ones((B, n), b8)
+        self.isolated_pl = np.zeros((B, n), b8)
+        self.bypass_pl = np.zeros((B, n), b8)
+        self.score_pl = np.zeros((B, n), i64)
+        self.ccws_base = np.zeros(B, i64)
+        self.ccws_budget = np.zeros(B, i64)
+        self.sp_bypass = np.zeros(B, b8)
+        self.sp_thresh = np.zeros(B, np.float64)
+        self.sp_base = np.zeros((B, n), b8)
+        self.ciao_stall = np.full((B, n), -1, i64)
+        self.ciao_iso = np.full((B, n), -1, i64)
+        self.stall_len = np.zeros(B, i64)
+        self.iso_len = np.zeros(B, i64)
+        self.fam = np.zeros(B, np.int8)
+        self.mode_p = np.zeros(B, b8)
+        self.mode_t = np.zeros(B, b8)
+        for b, pol in enumerate(self.policies):
+            self.dets[b].adopt_row(self.det_pl, b)
+            pol.adopt_mask_rows(self.allowed_pl[b], self.isolated_pl[b],
+                                self.bypass_pl[b])
+            if type(pol).epoch_tick is BasePolicy.epoch_tick:
+                self.fam[b] = F_PASSIVE
+            elif isinstance(pol, CCWSPolicy):
+                self.fam[b] = F_CCWS
+                pol.adopt_score_row(self.score_pl[b])
+                self.ccws_base[b] = pol.base
+                self.ccws_budget[b] = pol.budget
+            elif isinstance(pol, StatPCALPolicy):
+                self.fam[b] = F_STATP
+                pol.adopt_statpcal_rows(self.sp_bypass[b:b + 1],
+                                        self.sp_thresh[b:b + 1],
+                                        self.sp_base[b])
+            elif isinstance(pol, CIAOPolicy):
+                self.fam[b] = F_CIAO
+                pol.adopt_ciao_rows(self.ciao_stall[b],
+                                    self.stall_len[b:b + 1],
+                                    self.ciao_iso[b],
+                                    self.iso_len[b:b + 1])
+                self.mode_p[b] = pol.mode in ("p", "c")
+                self.mode_t[b] = pol.mode in ("t", "c")
+            else:           # custom subclass: per-cell object fallback
+                self.fam[b] = F_OBJECT
+
+        # next-trigger table: passive cells never pause for epochs; CIAO
+        # cells with empty stacks skip straight to the high boundary
+        self._stride_ok = (self.high_epoch % self.low_epoch == 0
+                           and self.high_epoch > self.low_epoch)
+        self.next_epoch = np.where(
+            self.fam == F_PASSIVE, _HUGE,
+            np.where((self.fam == F_CIAO) & self._stride_ok,
+                     self.high_epoch, self.low_epoch)).astype(i64)
 
         # flat zero-copy views + index constants for the numpy stepper
         # (per-call numpy overhead dominates at these batch widths, so
@@ -263,18 +395,18 @@ class BatchedSMEngine:
         self._l2_stamp_f = self.l2_stamp.reshape(-1)
         self._dram_free_f = self.dram_free.reshape(-1)
         ar = np.arange
-        self._arB = ar(B, dtype=np.int64)
-        self._ar_ways = ar(self.l1_ways, dtype=np.int64)
-        self._ar_vk = ar(self.v_k, dtype=np.int64)
-        self._ar_l2w = ar(self.l2_ways, dtype=np.int64)
-        self._ar_P = ar(P, dtype=np.int64)
+        self._arB = ar(B, dtype=i64)
+        self._ar_ways = ar(self.l1_ways, dtype=i64)
+        self._ar_vk = ar(self.v_k, dtype=i64)
+        self._ar_l2w = ar(self.l2_ways, dtype=i64)
+        self._ar_P = ar(P, dtype=i64)
         self._row_n = self._arB * n
         self._row_nf = self._arB * nf
         self._row_vnf = self._arB * vnf
         self._row_vsets = self._arB * self.v_sets
-        self._row_l2nf = self._arB * l2nf
+        self._row_l2nf = self.mem_of * l2nf
         self._row_nrb = self._arB * nrb
-        self._row_ch = self._arB * self.dram_channels
+        self._row_ch = self.mem_of * self.dram_channels
         self._tok_base = self.u_of * (n * self.L)
 
         self.timelines: List[List[Tuple[int, float, int]]] = \
@@ -295,18 +427,17 @@ class BatchedSMEngine:
                 self._finalize(b)
 
     # --------------------------------------------------- shared handlers
-    # Everything below mirrors, line for line, what SMSimulator.advance
-    # does outside the per-dispatch chain. The steppers guarantee these
-    # run at exactly the same points in each cell's instruction stream.
+    # Everything below mirrors, per row, what SMSimulator.advance does
+    # outside the per-dispatch chain. The steppers guarantee these run at
+    # exactly the same points in each row's instruction stream.
     def _refresh_masks(self, b: int) -> None:
+        """Re-derive the dispatch masks of row ``b`` from the (aliased)
+        policy masks. Padded/done warps drop out through ``done``."""
         pol = self.policies[b]
         self.mask_ver[b] = pol.mask_version
-        nb = int(self.n_of[b])
-        self.avail[b, :nb] = pol.allowed_mask[:nb] & ~self.done[b, :nb]
-        if nb < self.n_warps:
-            self.avail[b, nb:] = False
-        self.iso[b, :nb] = pol.isolated_mask[:nb]
-        self.byp[b, :nb] = pol.bypass_mask[:nb]
+        self.avail[b] = pol.allowed_mask & ~self.done[b]
+        self.iso[b] = pol.isolated_mask
+        self.byp[b] = pol.bypass_mask
 
     def _maybe_refresh(self, b: int) -> None:
         if self.policies[b].mask_version != self.mask_ver[b]:
@@ -316,35 +447,98 @@ class BatchedSMEngine:
         cyc = int(self.cycle[b])
         if cyc <= 0:
             return 0.0
-        util = int(self.dram_requests[b]) * self.dram_gap / \
+        util = int(self.dram_requests[self.mem_of[b]]) * self.dram_gap / \
             (self.dram_channels * cyc)
         return 1.0 if util > 1.0 else util
 
-    def _epoch_call(self, b: int) -> None:
-        det = self.dets[b]
-        li = int(self.li[b])
-        det.inst_total, det.irs_inst = li, li - int(self.irs_off[b])
+    def _util_vec(self, idx: np.ndarray) -> np.ndarray:
+        """statPCAL's DRAM utilization, per flagged row (chip-wide
+        request count over the row's local cycle — exactly the scalar
+        fused path's formula)."""
+        cyc = self.cycle[idx]
+        reqs = self.dram_requests[self.mem_of[idx]]
+        util = np.where(cyc > 0,
+                        reqs * self.dram_gap
+                        / np.maximum(self.dram_channels * cyc, 1), 0.0)
+        return np.minimum(util, 1.0)
+
+    def _epoch_batch(self, idx: np.ndarray, anchor: np.ndarray) -> None:
+        """Service the epoch boundary for every row in ``idx`` with ONE
+        vectorized pass per policy family over the stacked planes — the
+        replacement for the per-cell ``policy.epoch_tick`` replay.
+        ``anchor`` marks rows whose next-trigger entry advances (epoch
+        pauses); throttled rows keep their anchor, like the scalar loop.
+        """
+        if not idx.size:
+            return
+        pl = self.det_pl
+        li = self.li
+        pl.inst_total[idx] = li[idx]
+        pl.irs_inst[idx] = li[idx] - self.irs_off[idx]
+        fam = self.fam[idx]
+        sel = fam == F_CCWS
+        if sel.any():
+            c = idx[sel]
+            _epoch.ccws_tick(self.score_pl, self.ccws_base,
+                             self.ccws_budget, ~self.done[c],
+                             self.allowed_pl, c)
+        sel = fam == F_STATP
+        if sel.any():
+            s = idx[sel]
+            _epoch.statpcal_tick(self.sp_bypass, self._util_vec(s),
+                                 self.sp_thresh, self.sp_base,
+                                 self.allowed_pl, self.bypass_pl, s)
+        sel = fam == F_CIAO
+        if sel.any():
+            g = idx[sel]
+            n_act = np.count_nonzero(self.allowed_pl[g] & ~self.done[g],
+                                     axis=1)
+            low, high = _epoch.poll_epochs(pl, g, n_act)
+            lo = g[low]
+            if lo.size:
+                _epoch.ciao_low_tick(pl, self.ciao_stall, self.stall_len,
+                                     self.ciao_iso, self.iso_len,
+                                     self.allowed_pl, self.isolated_pl,
+                                     self.done, n_act[low], lo)
+            for j in np.flatnonzero(high):
+                b = int(g[j])
+                # alive after the low tick, like the scalar order
+                alive = self.allowed_pl[b] & ~self.done[b]
+                _epoch.ciao_high_tick_cell(
+                    pl, b, self.ciao_stall, self.stall_len,
+                    self.ciao_iso, self.iso_len, self.allowed_pl,
+                    self.isolated_pl, self.done, alive,
+                    bool(self.mode_p[b]), bool(self.mode_t[b]))
+        sel = fam == F_OBJECT
+        if sel.any():
+            for b in idx[sel]:
+                self._epoch_object(int(b))
+        self.irs_off[idx] = li[idx] - pl.irs_inst[idx]    # aging moves it
+        # masks may have changed: refresh the derived dispatch rows
+        self.avail[idx] = self.allowed_pl[idx] & ~self.done[idx]
+        self.iso[idx] = self.isolated_pl[idx]
+        self.byp[idx] = self.bypass_pl[idx]
+        a = idx[anchor]
+        if a.size:
+            nxt = (li[a] // self.low_epoch + 1) * self.low_epoch
+            if self._stride_ok:
+                skip = (self.fam[a] == F_CIAO) & \
+                    ((self.stall_len[a] + self.iso_len[a]) == 0)
+                if skip.any():
+                    nxt = np.where(
+                        skip,
+                        (li[a] // self.high_epoch + 1) * self.high_epoch,
+                        nxt)
+            self.next_epoch[a] = nxt
+
+    def _epoch_object(self, b: int) -> None:
+        """Fallback for policy classes the vectorized dispatch does not
+        know (custom subclasses): replay through the object, exactly like
+        the scalar loop."""
         pol = self.policies[b]
         pol.epoch_tick(None, self.done[b, :int(self.n_of[b])],
                        self._util(b))
-        self.irs_off[b] = li - det.irs_inst       # aging moves this
         self._maybe_refresh(b)
-        if isinstance(pol, CCWSPolicy):
-            # CCWS epoch decay reassigns the score buffer; re-point the
-            # C stepper at the new one
-            self._score_ptr_refresh(b)
-
-    def _handle_epoch(self, b: int) -> None:
-        li = int(self.li[b])
-        self.next_epoch[b] = (li // self.low_epoch + 1) * self.low_epoch
-        self._epoch_call(b)
-
-    def _handle_throttle(self, b: int) -> None:
-        # everything throttled: advance to let epochs fire. Note the
-        # scalar loop does NOT re-anchor next_epoch here.
-        self.cycle[b] += self.low_epoch
-        self.li[b] += self.low_epoch
-        self._epoch_call(b)
 
     def _handle_warp_done(self, b: int, wid: int) -> None:
         # NOTE: does not finalize — the scalar loop still runs the epoch
@@ -366,6 +560,13 @@ class BatchedSMEngine:
         self.last_instr[b] = self.instr[b]
         self.last_cycle[b] = self.cycle[b]
         self.window_mark[b] += self.timeline_every
+
+    def _slice_stop(self, rows: np.ndarray) -> None:
+        """Rows that reached their slice boundary stop for this phase;
+        a boundary at the cycle cap ends the row for good."""
+        self.runnable[rows] = False
+        for b in rows[self.until[rows] >= self.max_cycles]:
+            self._finalize(int(b))
 
     def _vta_probe_pop(self, b: int, wid: int, line: int) -> None:
         """Fused ``_vta_probe_hit`` against batch rows + the real
@@ -416,6 +617,7 @@ class BatchedSMEngine:
         if self.results[b] is not None:
             return
         self.live[b] = False
+        self.runnable[b] = False
         det = self.dets[b]
         # same exit flush as the scalar advance (inst counters are not
         # part of SimResult, but the detector object should read true)
@@ -443,8 +645,9 @@ class BatchedSMEngine:
             "evictions": int(self.cnt_evictions[b]),
             "smem_evictions": int(self.cnt_smem_evictions[b]),
             "vta_hits": int(self.cnt_vta_hits[b]),
-            # private hierarchy: the SM's request count IS the DRAM's
-            "dram_reqs": int(self.dram_requests[b]),
+            # this SM's own request count (equals the hierarchy's when
+            # the hierarchy is private, i.e. single-SM batches)
+            "dram_reqs": int(self.cnt_dram_reqs[b]),
         }
         h = stats["l1_hit"] + stats["smem_hit"]
         tot = h + stats["l1_miss"] + stats["smem_miss"] \
@@ -465,9 +668,10 @@ class BatchedSMEngine:
         )
 
     # ------------------------------------------------------------- run
-    def run(self, timeline_every: int = 20_000) -> List[SimResult]:
-        """Run every cell to completion (one-shot: like
-        ``SMSimulator.run`` but for the whole batch)."""
+    def run(self, timeline_every: int = 20_000):
+        """Run every cell to completion (one-shot). Returns a
+        ``SimResult`` per cell for single-SM batches, a ``GPUResult``
+        per cell for multi-SM batches."""
         if timeline_every != self.timeline_every:
             self.timeline_every = timeline_every
             self.window_mark[:] = timeline_every
@@ -480,31 +684,127 @@ class BatchedSMEngine:
             if not _cstep.available():
                 raise RuntimeError(
                     f"C stepper unavailable: {_cstep.unavailable_reason()}")
-            self._run_c(_cstep)
+            self._run_sliced(self._make_c_round(_cstep))
         else:
-            self._run_numpy()
+            self._run_sliced(self._np_round)
         self.backend = backend
+        if self.gpu is not None:
+            return self._collect_gpu()
         return [r for r in self.results]
 
+    def _run_sliced(self, round_fn) -> None:
+        """The chip schedule: advance SM phase k of every cell to the
+        slice boundary, then phase k+1, ... — exactly
+        ``GPUSimulator.run``'s interleaving. Single-SM batches are the
+        degenerate S=1, slice=max_cycles case (one phase to completion).
+        """
+        slice_cycles = self.gpu.slice_cycles if self.gpu is not None \
+            else self.max_cycles
+        perf = self.perf
+        t = 0
+        while t < self.max_cycles and self.live.any():
+            t += slice_cycles
+            until = min(t, self.max_cycles)
+            for rows in self._phase_rows:
+                alive = rows[self.live[rows]]
+                if not alive.size:
+                    continue
+                self.until[alive] = until
+                self.runnable[alive] = True
+                t0 = time.perf_counter()
+                round_fn()
+                perf["stepper_s"] += time.perf_counter() - t0
+        # chip cycle cap with rows still running: results at current state
+        for b in np.flatnonzero(self.live):
+            self._finalize(int(b))
+
+    # --------------------------------------------------------- C stepper
+    def _make_c_round(self, cstep):
+        self._score_ptrs = np.zeros(self.B, np.uint64)
+        bumps = np.zeros(self.B, np.int64)
+        for b, pol in enumerate(self.policies):
+            if isinstance(pol, CCWSPolicy):
+                # the score row is a batch-plane row decayed in place, so
+                # this pointer stays valid for the whole run
+                self._score_ptrs[b] = pol.score.ctypes.data
+                bumps[b] = pol.bump
+        det_ptrs = np.zeros((self.B, 4), np.uint64)
+        for b, det in enumerate(self.dets):
+            det_ptrs[b, 0] = det.irs_hits.ctypes.data
+            det_ptrs[b, 1] = det.vta.hits.ctypes.data
+            det_ptrs[b, 2] = det.interfering_wid.ctypes.data
+            det_ptrs[b, 3] = det.sat_counter.ctypes.data
+        params = cstep.bind(self, det_ptrs, self._score_ptrs, bumps)
+        perf = self.perf
+
+        def round_fn():
+            live, runnable = self.live, self.runnable
+            while bool((live & runnable).any()):
+                t0 = time.perf_counter()
+                cstep.step(params)
+                t1 = time.perf_counter()
+                self._drain_pauses()
+                t2 = time.perf_counter()
+                perf["drain_s"] += t2 - t1
+                perf["stepper_s"] -= t2 - t1   # counted by _run_sliced
+                perf["rounds"] += 1
+        return round_fn
+
+    def _drain_pauses(self) -> None:
+        """Service every paused row with one vectorized pass per pause
+        kind (the former per-cell Python replay). Per-row order matches
+        the scalar loop: warp-done, epoch, timeline, then finalize."""
+        idx = np.flatnonzero(self.pause)
+        if not idx.size:
+            return
+        flags = self.pause[idx]
+        self.pause[idx] = 0
+        slc = idx[(flags & P_SLICE) != 0]
+        if slc.size:
+            self._slice_stop(slc)
+        thr = idx[(flags & P_THROTTLE) != 0]
+        if thr.size:
+            # everything throttled: advance to let epochs fire. Note the
+            # scalar loop does NOT re-anchor next_epoch here.
+            self.cycle[thr] += self.low_epoch
+            self.li[thr] += self.low_epoch
+        wd = idx[(flags & P_WARPDONE) != 0]
+        for b in wd:
+            # the stepper already flipped done/avail/last_wid
+            self._handle_warp_done(int(b), int(self.last_done_wid[b]))
+        ep = idx[(flags & P_EPOCH) != 0]
+        if ep.size or thr.size:
+            allb = np.concatenate([ep, thr])
+            anchor = np.zeros(len(allb), bool)
+            anchor[:len(ep)] = True
+            self._epoch_batch(allb, anchor)
+        tl = idx[(flags & P_TIMELINE) != 0]
+        for b in tl:
+            self._handle_timeline(int(b))
+        for b in wd:
+            if self.remaining[b] == 0:
+                self._finalize(int(b))
+
     # ------------------------------------------------- numpy lockstep
-    def _run_numpy(self) -> None:
-        while bool(self.live.any()):
+    def _np_round(self) -> None:
+        live, runnable = self.live, self.runnable
+        while bool((live & runnable).any()):
             self._np_iteration()
 
     def _np_iteration(self) -> None:
-        """One lockstep iteration: one scheduler dispatch per live cell,
-        all cells advanced by masked vectorized updates. Mirrors one trip
-        through the scalar ``while`` loop of ``SMSimulator.advance``."""
-        live = self.live
+        """One lockstep iteration: one scheduler dispatch per runnable
+        row, all rows advanced by masked vectorized updates. Mirrors one
+        trip through the scalar ``while`` loop of ``SMSimulator.advance``.
+        """
+        act = self.live & self.runnable
         cycle = self.cycle
-        # cells at the cycle cap stop (scalar loop condition)
-        if cycle.max() >= self.max_cycles:
-            cap = live & (cycle >= self.max_cycles)
-            if cap.any():
-                for b in np.flatnonzero(cap):
-                    self._finalize(b)
-                if not live.any():
-                    return
+        # rows at their slice boundary stop (scalar loop condition)
+        hit = act & (cycle >= self.until)
+        if hit.any():
+            self._slice_stop(np.flatnonzero(hit))
+            act &= ~hit
+            if not act.any():
+                return
         rowoff = self._row_n
         ready_f, avail_f = self._ready_f, self._avail_f
 
@@ -513,9 +813,9 @@ class BatchedSMEngine:
         lw_ok = lw >= 0
         lwc = np.where(lw_ok, lw, 0)
         g_idx = rowoff + lwc
-        greedy = live & lw_ok & avail_f[g_idx] & (ready_f[g_idx] <= cycle)
+        greedy = act & lw_ok & avail_f[g_idx] & (ready_f[g_idx] <= cycle)
         wid = np.where(greedy, lw, -1)
-        need = live & ~greedy
+        need = act & ~greedy
         if need.any():
             cand = (self.ready <= cycle[:, None]) & self.avail
             w = cand.argmax(1)
@@ -528,16 +828,22 @@ class BatchedSMEngine:
                 w2 = sched.argmin(1)
                 thr = skip & ~avail_f[rowoff + w2]
                 if thr.any():
-                    for b in np.flatnonzero(thr):
-                        self._handle_throttle(b)
+                    # everything throttled: advance to let epochs fire
+                    # (the scalar loop does NOT re-anchor next_epoch)
+                    ti = np.flatnonzero(thr)
+                    cycle[ti] += self.low_epoch
+                    self.li[ti] += self.low_epoch
+                    t0 = time.perf_counter()
+                    self._epoch_batch(ti, np.zeros(len(ti), bool))
+                    self.perf["drain_s"] += time.perf_counter() - t0
                 sk = skip & ~thr
                 if sk.any():
                     best = ready_f[rowoff + w2]
-                    clamp = sk & (best >= self.max_cycles)
+                    clamp = sk & (best >= self.until)
                     if clamp.any():
-                        cycle[clamp] = self.max_cycles
-                        for b in np.flatnonzero(clamp):
-                            self._finalize(b)
+                        ci = np.flatnonzero(clamp)
+                        cycle[ci] = self.until[ci]
+                        self._slice_stop(ci)
                         sk &= ~clamp
                     np.copyto(cycle, best, where=sk)
                     lw_ok2 = lw >= 0
@@ -550,7 +856,7 @@ class BatchedSMEngine:
                     wid = np.where(w2sel, w2, wid)
                     self.last_wid = np.where(w2sel, w2, self.last_wid)
 
-        disp = self.live & (wid >= 0)
+        disp = act & (wid >= 0)
         if not disp.any():
             return
         widc = np.where(disp, wid, 0)
@@ -589,8 +895,10 @@ class BatchedSMEngine:
                 self._handle_warp_done(b, int(widc[b]))
         ep = disp & (self.li >= self.next_epoch)
         if ep.any():
-            for b in np.flatnonzero(ep):
-                self._handle_epoch(b)
+            ei = np.flatnonzero(ep)
+            t0 = time.perf_counter()
+            self._epoch_batch(ei, np.ones(len(ei), bool))
+            self.perf["drain_s"] += time.perf_counter() - t0
         tl = disp & (self.instr >= self.window_mark)
         if tl.any():
             for b in np.flatnonzero(tl):
@@ -602,7 +910,11 @@ class BatchedSMEngine:
 
     def _np_mem_chain(self, mem, tok, widc, rw, cycle, new_ready):
         """The fused per-access chain, vectorized over the batch axis.
-        Returns the updated new_ready; all state scatters happen here."""
+        Returns the updated new_ready; all state scatters happen here.
+        Post-L1 scatters go through masked row subsets: rows sharing a
+        hierarchy plane (multi-SM cells) never collide because only one
+        SM phase is runnable at a time, and within the subset the target
+        slots are distinct."""
         cfg = self.cfg
         line = tok >> _SHIFT
         bypm = mem & self._byp_f[rw]
@@ -722,18 +1034,21 @@ class BatchedSMEngine:
             f2 = b2 + eq2.argmax(1)
             if m2.any():
                 vic2 = b2 + st2_f[wi2].argmin(1)
-                t2_f[vic2] = np.where(m2, line, t2_f[vic2])
+                t2_f[vic2[m2]] = line[m2]
                 self.l2_misses += m2
                 chf = self._row_ch + (line >> 2) % self.dram_channels
+                chm = chf[m2]
                 df_f = self._dram_free_f
-                free = df_f[chf]
-                start = np.maximum(cycle, free)
-                df_f[chf] = np.where(m2, start + self.dram_gap, free)
-                self.dram_requests += m2
-                lat = np.where(m2, cfg.lat_dram + start - cycle, lat)
+                free = df_f[chm]
+                start = np.maximum(cycle[m2], free)
+                df_f[chm] = start + self.dram_gap
+                self.dram_requests[self.mem_of[m2]] += 1
+                self.cnt_dram_reqs += m2
+                lat[m2] = cfg.lat_dram + start - cycle[m2]
                 f2 = np.where(m2, vic2, f2)
-            st2_f[f2] = np.where(post, self.l2_tick, st2_f[f2])
-            self.l2_tick += post
+            fp = f2[post]
+            st2_f[fp] = self.l2_tick[self.mem_of[post]]
+            self.l2_tick[self.mem_of[post]] += 1
 
         # ---- dependent use vs hit-under-miss pending queue ----
         done_t = cycle + lat
@@ -761,7 +1076,7 @@ class BatchedSMEngine:
 
     def _np_vta_insert(self, mask, owner, victim_line, evictor) -> None:
         """Vectorized circular-FIFO insert (the caller has excluded
-        self-eviction). One insert per cell per iteration, so the fancy
+        self-eviction). One insert per row per iteration, so the fancy
         scatters never collide."""
         v_k = self.v_k
         s = owner % self.v_sets
@@ -778,54 +1093,46 @@ class BatchedSMEngine:
         count_f[srow] = np.where(mask & ~full, cc + 1, cc)
         self.v_inserts += mask
 
-    # --------------------------------------------------------- C stepper
-    def _score_ptr_refresh(self, b: int) -> None:
-        ptrs = getattr(self, "_score_ptrs", None)
-        if ptrs is not None:
-            ptrs[b] = self.policies[b].score.ctypes.data
-
-    def _run_c(self, cstep) -> None:
-        self._score_ptrs = np.zeros(self.B, np.uint64)
-        bumps = np.zeros(self.B, np.int64)
-        for b, pol in enumerate(self.policies):
-            if isinstance(pol, CCWSPolicy):
-                self._score_ptrs[b] = pol.score.ctypes.data
-                bumps[b] = pol.bump
-        det_ptrs = np.zeros((self.B, 4), np.uint64)
-        for b, det in enumerate(self.dets):
-            det_ptrs[b, 0] = det.irs_hits.ctypes.data
-            det_ptrs[b, 1] = det.vta.hits.ctypes.data
-            det_ptrs[b, 2] = det.interfering_wid.ctypes.data
-            det_ptrs[b, 3] = det.sat_counter.ctypes.data
-        params = cstep.bind(self, det_ptrs, self._score_ptrs, bumps)
-        while bool(self.live.any()):
-            cstep.step(params)
-            self._drain_pauses()
-
-    def _drain_pauses(self) -> None:
-        for b in np.flatnonzero(self.pause):
-            flags = int(self.pause[b])
-            self.pause[b] = 0
-            if flags & P_THROTTLE:
-                self._handle_throttle(b)
-                continue
-            if flags & P_CAP:
-                self._finalize(b)
-                continue
-            if flags & P_WARPDONE:
-                # the stepper already flipped done/avail/last_wid
-                self._handle_warp_done(b, int(self.last_done_wid[b]))
-            if flags & P_EPOCH:
-                self._handle_epoch(b)
-            if flags & P_TIMELINE:
-                self._handle_timeline(b)
-            if flags & P_WARPDONE and self.remaining[b] == 0:
-                self._finalize(b)
+    # ------------------------------------------------- cell aggregation
+    def _collect_gpu(self) -> List[GPUResult]:
+        """Aggregate per-SM rows into per-cell GPUResults, exactly like
+        ``GPUSimulator.run``."""
+        out: List[GPUResult] = []
+        S = self.S
+        for c in range(self.n_cells):
+            rows = list(range(c * S, (c + 1) * S))
+            per = [self.results[r] for r in rows]
+            cycles = max((r.cycles for r in per), default=1)
+            instr = sum(r.instructions for r in per)
+            # chip-level rates average only SMs that received work
+            busy = [r for r in per if r.instructions] or per
+            out.append(GPUResult(
+                policy=per[0].policy if per else
+                self.policies[rows[0]].name,
+                num_sms=S,
+                cycles=cycles,
+                instructions=instr,
+                ipc=instr / max(cycles, 1),
+                l1_hit_rate=float(np.mean([r.l1_hit_rate for r in busy]))
+                if busy else 0.0,
+                vta_hits=sum(r.vta_hits for r in per),
+                mean_active_warps=float(np.mean(
+                    [r.mean_active_warps for r in busy])) if busy else 0.0,
+                mem_stats={
+                    "l2_hits": int(self.l2_hits[rows].sum()),
+                    "l2_misses": int(self.l2_misses[rows].sum()),
+                    "dram_reqs": int(self.dram_requests[
+                        self.mem_of[rows[0]]]),
+                },
+                per_sm=per,
+            ))
+        return out
 
 
 def run_batched(cells: Sequence[BatchCell],
                 cfg: Optional[SimConfig] = None,
                 backend: str = "auto",
-                timeline_every: int = 20_000) -> List[SimResult]:
+                timeline_every: int = 20_000,
+                gpu: Optional[GPUConfig] = None):
     """Convenience wrapper: build the engine, run to completion."""
-    return BatchedSMEngine(cells, cfg, backend).run(timeline_every)
+    return BatchedSMEngine(cells, cfg, backend, gpu=gpu).run(timeline_every)

@@ -118,6 +118,38 @@ def _offset_cta(cta: CTA, copy: int, offset: int) -> CTA:
     return CTA(cta_id=cta.cta_id, copy=copy, traces=traces)
 
 
+def place_ctas(workload, gpu: GPUConfig) -> List[List[CTA]]:
+    """CTA placement for a workload on ``gpu``: replicate/offset copies,
+    then the deterministic CTA scheduler. One list of CTAs per SM."""
+    base_ctas = make_ctas(workload, gpu.warps_per_cta)
+    if gpu.replicate:
+        ctas: List[CTA] = []
+        for copy in range(gpu.num_sms):
+            off = copy << gpu.addr_offset_bits
+            ctas.extend(_offset_cta(c, copy, off) for c in base_ctas)
+    else:
+        ctas = base_ctas
+    return CTAScheduler(gpu.cta_scheduler).assign(ctas, gpu.num_sms)
+
+
+def sm_subworkloads(workload, gpu: GPUConfig) -> List[_SubWorkload]:
+    """The per-SM trace slices of ``workload`` under ``gpu`` placement —
+    the exact workloads each of :class:`GPUSimulator`'s SMs receives.
+    Shared with the batched engine (:mod:`repro.core.batched`), which
+    stacks the same slices as (SM x cell) rows, so both execution paths
+    see identical per-SM traces."""
+    subs = []
+    for sm_ctas in place_ctas(workload, gpu):
+        traces = [t for cta in sm_ctas for t in cta.traces]
+        subs.append(_SubWorkload(
+            name=getattr(workload, "name", "workload"),
+            klass=getattr(workload, "klass", ""),
+            traces=traces,
+            smem_used_bytes=workload.smem_used_bytes,
+            n_wrp=getattr(workload, "n_wrp", 0)))
+    return subs
+
+
 class GPUSimulator:
     """N SMs contending on one shared post-L1 memory hierarchy."""
 
@@ -130,24 +162,13 @@ class GPUSimulator:
         self.policy_name = policy_name
         self.mem_sys = cfg.make_hierarchy()
 
-        base_ctas = make_ctas(workload, gpu.warps_per_cta)
-        if gpu.replicate:
-            ctas: List[CTA] = []
-            for copy in range(gpu.num_sms):
-                off = copy << gpu.addr_offset_bits
-                ctas.extend(_offset_cta(c, copy, off) for c in base_ctas)
-        else:
-            ctas = base_ctas
-        self.placement = CTAScheduler(gpu.cta_scheduler).assign(
-            ctas, gpu.num_sms)
-
+        self.placement = place_ctas(workload, gpu)
         self.sms: List[SMSimulator] = []
         for sm_ctas in self.placement:
-            traces = [t for cta in sm_ctas for t in cta.traces]
             sub = _SubWorkload(
                 name=getattr(workload, "name", "workload"),
                 klass=getattr(workload, "klass", ""),
-                traces=traces,
+                traces=[t for cta in sm_ctas for t in cta.traces],
                 smem_used_bytes=workload.smem_used_bytes,
                 n_wrp=getattr(workload, "n_wrp", 0))
             self.sms.append(SMSimulator(sub, policy_name, cfg,

@@ -22,11 +22,14 @@ The same detector instance is shared by the on-chip memory model (CIAO-P)
 and the warp scheduler (CIAO-T) — paper §III-C notes L1D and shared-memory
 interference do not mix, so one VTA suffices.
 
-The interference/pair lists and all per-warp counters are flat int arrays;
-epoch snapshots (``poll_epochs``) read the VTA's per-warp hit counters as
-one vector instead of looping the 48 warps, which together with the
-simulator's batched instruction counting keeps epoch upkeep off the
-per-instruction hot path.
+All per-warp counters, the interference/pair lists, and the epoch/IRS
+bookkeeping live in a **batch-of-1** :class:`repro.core.epoch.DetPlanes`
+row: the epoch math itself (crossing detection, windowed IRS snapshots,
+aging) is the vectorized kernel :func:`repro.core.epoch.poll_epochs`,
+which the batched engine calls over whole batches of cells at once and
+this object calls with ``B == 1``. :meth:`adopt_row` re-points a detector
+at a row of a full-batch plane so the engine's kernel writes and the
+object's reads share memory.
 """
 from __future__ import annotations
 
@@ -35,6 +38,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core import epoch as _epoch
 from repro.core.vta import VictimTagArray
 
 NO_WARP = -1
@@ -59,47 +63,65 @@ class DetectorConfig:
     aging_high_epochs: int = 10
 
 
+def _plane_prop(name, doc=None):
+    """2-D plane row: expose the (nw,)/(le,)-shaped row of the detector's
+    batch-of-1 planes as a plain array attribute."""
+    def get(self):
+        return getattr(self._pl, name)[0]
+    return property(get, doc=doc)
+
+
+def _scalar_prop(name, doc=None):
+    """1-D plane row: expose element 0 as a plain int attribute."""
+    def get(self):
+        return int(getattr(self._pl, name)[0])
+
+    def set_(self, value):
+        getattr(self._pl, name)[0] = value
+    return property(get, set_, doc=doc)
+
+
 class InterferenceDetector:
-    __slots__ = ("cfg", "vta", "interfering_wid", "sat_counter", "pair_list",
-                 "inst_total", "irs_inst", "irs_hits", "vta_hit_events",
-                 "pair_counts", "_high_crossings", "_low_idx", "_high_idx",
-                 "_low_base_hits", "_high_base_hits", "_low_base_inst",
-                 "_high_base_inst", "irs_low_snap", "irs_high_snap",
-                 "_wid_sets")
+    __slots__ = ("cfg", "vta", "_pl", "pair_counts", "vta_hit_events")
 
     def __init__(self, cfg: Optional[DetectorConfig] = None):
         # None default: a shared mutable DetectorConfig() default instance
         # would leak state (e.g. epoch overrides) between detectors.
         self.cfg = cfg = cfg if cfg is not None else DetectorConfig()
         self.vta = VictimTagArray(cfg.vta_sets, cfg.vta_tags_per_set)
-        n = cfg.list_entries
-        self.interfering_wid = np.full(n, NO_WARP, np.int64)
-        self.sat_counter = np.zeros(n, np.int64)
-        self.pair_list = np.full((n, 2), NO_WARP, np.int64)
-        self.inst_total = 0          # Inst-total counter (per SM)
-        self.irs_inst = 0            # aged copy used as Eq. 1 denominator
-        nw = cfg.num_warps
-        self.irs_hits = np.zeros(nw, np.int64)  # aged per-warp VTA-hit ctrs
+        # canonical state: a batch-of-1 row of the vectorized epoch planes
+        self._pl = _epoch.DetPlanes.alloc(1, cfg)
+        # the VTA's per-set hit counters ARE the plane row (epoch
+        # snapshots and the batched engine's C stepper write through it)
+        self.vta.hits = self._pl.vta_hits[0]
         self.vta_hit_events = 0
         # (evictor, victim) -> event count; the Fig. 4 non-uniformity data.
         self.pair_counts: Dict[Tuple[int, int], int] = {}
-        self._high_crossings = 0
-        # windowed IRS state: snapshots taken at epoch crossings
-        self._low_idx = 0
-        self._high_idx = 0
-        self._low_base_hits = np.zeros(nw, np.int64)
-        self._high_base_hits = np.zeros(nw, np.int64)
-        self._low_base_inst = 0
-        self._high_base_inst = 0
-        self.irs_low_snap = np.zeros(nw, np.float64)
-        self.irs_high_snap = np.zeros(nw, np.float64)
-        # per-warp view into the VTA hit counters (wid -> vta set index)
-        self._wid_sets = np.arange(nw) % cfg.vta_sets
+
+    # plane-backed attributes (same names/shapes as the former ndarrays
+    # and ints; the arrays are row views, so elementwise mutation by the
+    # hot loops lands in the planes the epoch kernels read)
+    interfering_wid = _plane_prop("interfering")
+    sat_counter = _plane_prop("sat")
+    pair_list = _plane_prop("pair_list")
+    irs_hits = _plane_prop("irs_hits")
+    irs_low_snap = _plane_prop("irs_low_snap")
+    irs_high_snap = _plane_prop("irs_high_snap")
+    inst_total = _scalar_prop("inst_total")
+    irs_inst = _scalar_prop("irs_inst")
+
+    def adopt_row(self, planes: "_epoch.DetPlanes", b: int) -> None:
+        """Re-point this detector at row ``b`` of a full-batch plane set
+        (used by the batched engine). Current state is copied in; from
+        then on object reads and batch-kernel writes share memory."""
+        planes.copy_row_from(self._pl, b)
+        self._pl = planes.row(b)
+        self.vta.hits = planes.vta_hits[b]
 
     # ------------------------------------------------------------- events
     def on_instruction(self, n: int = 1) -> None:
-        self.inst_total += n
-        self.irs_inst += n
+        self._pl.inst_total[0] += n
+        self._pl.irs_inst[0] += n
 
     def on_eviction(self, owner_wid: int, line_addr: int,
                     evictor_wid: int) -> None:
@@ -121,17 +143,17 @@ class InterferenceDetector:
         key = (evictor, wid)
         self.pair_counts[key] = self.pair_counts.get(key, 0) + 1
         i = wid % self.cfg.list_entries
-        if self.interfering_wid[i] == evictor:
-            self.sat_counter[i] = min(self.sat_counter[i] + 1,
-                                      self.cfg.sat_max)
-        elif self.interfering_wid[i] == NO_WARP:
-            self.interfering_wid[i] = evictor
-            self.sat_counter[i] = 0
+        interfering, sat = self.interfering_wid, self.sat_counter
+        if interfering[i] == evictor:
+            sat[i] = min(sat[i] + 1, self.cfg.sat_max)
+        elif interfering[i] == NO_WARP:
+            interfering[i] = evictor
+            sat[i] = 0
         else:
-            if self.sat_counter[i] == 0:
-                self.interfering_wid[i] = evictor   # replace on underflow
+            if sat[i] == 0:
+                interfering[i] = evictor   # replace on underflow
             else:
-                self.sat_counter[i] -= 1
+                sat[i] -= 1
         return evictor
 
     # ---------------------------------------------------------------- IRS
@@ -148,65 +170,44 @@ class InterferenceDetector:
         """Check for low/high epoch crossings (robust to batched instruction
         counting). At each crossing, snapshot the *windowed* IRS — Eq. 1
         evaluated over the epoch that just ended, so IRS tracks "the latest
-        IRS_i" (§IV-A) and falls once an interferer is isolated/stalled."""
-        cfg = self.cfg
-        active_warps = max(active_warps, 1)
-        crossed_low = crossed_high = False
-        hits = self.vta.hits
-        low_idx = self.inst_total // cfg.low_epoch
-        if low_idx != self._low_idx:
-            self._low_idx = low_idx
-            window = max(self.inst_total - self._low_base_inst, 1)
-            per_warp = window / active_warps
-            cur = hits[self._wid_sets]
-            self.irs_low_snap = (cur - self._low_base_hits) / per_warp
-            self._low_base_hits = cur
-            self._low_base_inst = self.inst_total
-            crossed_low = True
-        high_idx = self.inst_total // cfg.high_epoch
-        if high_idx != self._high_idx:
-            self._high_idx = high_idx
-            window = max(self.inst_total - self._high_base_inst, 1)
-            per_warp = window / active_warps
-            cur = hits[self._wid_sets]
-            self.irs_high_snap = (cur - self._high_base_hits) / per_warp
-            self._high_base_hits = cur
-            self._high_base_inst = self.inst_total
-            crossed_high = True
-            self._high_crossings += 1
-            if cfg.aging_high_epochs and \
-                    self._high_crossings % cfg.aging_high_epochs == 0:
-                self.irs_inst //= 2
-                self.irs_hits //= 2
-        return crossed_low, crossed_high
+        IRS_i" (§IV-A) and falls once an interferer is isolated/stalled.
+
+        Batch-of-1 delegation to :func:`repro.core.epoch.poll_epochs` —
+        the same kernel the batched engine runs over whole batches."""
+        low, high = _epoch.poll_epochs(
+            self._pl, _epoch.IDX0,
+            np.asarray([active_warps], np.int64))
+        return bool(low[0]), bool(high[0])
 
     def irs_low(self, wid: int) -> float:
-        return float(self.irs_low_snap[wid % self.cfg.num_warps])
+        return float(self._pl.irs_low_snap[0, wid % self.cfg.num_warps])
 
     def irs_high(self, wid: int) -> float:
-        return float(self.irs_high_snap[wid % self.cfg.num_warps])
+        return float(self._pl.irs_high_snap[0, wid % self.cfg.num_warps])
 
     def most_interfering(self, wid: int) -> int:
-        return int(self.interfering_wid[wid % self.cfg.list_entries])
+        return int(self._pl.interfering[0, wid % self.cfg.list_entries])
 
     # ------------------------------------------------------------ pair list
     def record_isolation(self, interfering: int, interfered: int) -> None:
-        self.pair_list[interfering % self.cfg.list_entries, 0] = interfered
+        self._pl.pair_list[0, interfering % self.cfg.list_entries, 0] = \
+            interfered
 
     def record_stall(self, interfering: int, interfered: int) -> None:
-        self.pair_list[interfering % self.cfg.list_entries, 1] = interfered
+        self._pl.pair_list[0, interfering % self.cfg.list_entries, 1] = \
+            interfered
 
     def isolation_trigger(self, wid: int) -> int:
-        return int(self.pair_list[wid % self.cfg.list_entries, 0])
+        return int(self._pl.pair_list[0, wid % self.cfg.list_entries, 0])
 
     def stall_trigger(self, wid: int) -> int:
-        return int(self.pair_list[wid % self.cfg.list_entries, 1])
+        return int(self._pl.pair_list[0, wid % self.cfg.list_entries, 1])
 
     def clear_isolation(self, wid: int) -> None:
-        self.pair_list[wid % self.cfg.list_entries, 0] = NO_WARP
+        self._pl.pair_list[0, wid % self.cfg.list_entries, 0] = NO_WARP
 
     def clear_stall(self, wid: int) -> None:
-        self.pair_list[wid % self.cfg.list_entries, 1] = NO_WARP
+        self._pl.pair_list[0, wid % self.cfg.list_entries, 1] = NO_WARP
 
     # -------------------------------------------------------------- epochs
     def at_high_epoch(self) -> bool:

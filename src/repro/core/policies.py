@@ -8,14 +8,22 @@ All policies share the interface the SM simulator drives:
   * ``select(ready)``     — pick the next warp (all use GTO order, §V-A)
   * ``epoch_tick(...)``   — epoch-boundary decisions (Algorithm 1 for CIAO)
 
-The per-warp decisions are additionally materialized as cached NumPy bool
-masks (``allowed_mask`` / ``isolated_mask`` / ``bypass_mask``) so the
+The per-warp decisions are materialized as cached NumPy bool masks
+(``allowed_mask`` / ``isolated_mask`` / ``bypass_mask``) so the
 simulator's dispatch loop reads array elements instead of making millions
 of ``allow()`` calls. The masks only change where policy state changes —
 ``epoch_tick``, ``on_mem_event``-driven decisions, ``on_warp_done`` — and
 every change bumps ``mask_version`` so the simulator can cache derived
-masks (e.g. allowed & ~done) between changes. The scalar methods stay as
-thin mask reads for external users (serving engine, tests).
+masks (e.g. allowed & ~done) between changes.
+
+The epoch-boundary math itself lives in :mod:`repro.core.epoch` as
+vectorized batch-first kernels; the ``epoch_tick`` methods here are
+**batch-of-1 views** onto those kernels, and all mask/score/stack updates
+are strictly *in place* (arrays are never reassigned). That lets the
+batched engine (:mod:`repro.core.batched`) re-point a policy's arrays at
+rows of its stacked batch planes (``adopt_*_rows``) and run the very same
+kernels once per pause-drain for every flagged cell — scalar and batched
+paths share one implementation, pinned bit-for-bit by the golden cells.
 
 CIAO's ``epoch_tick`` is Algorithm 1 with one high-cutoff action per epoch
 (the paper applies one isolate/stall per scheduling event and "repeats this
@@ -30,6 +38,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import epoch as _epoch
 from repro.core.interference import InterferenceDetector, NO_WARP
 
 POLICY_NAMES = ("gto", "ccws", "best-swl", "statpcal",
@@ -77,8 +86,43 @@ class BasePolicy:
                    mem_util: float = 0.0) -> None:
         pass
 
+    def next_epoch_after(self, li: int) -> int:
+        """Next instruction count at which ``epoch_tick`` can have an
+        observable effect — the per-cell next-trigger table. The base
+        tick is a no-op, so passive policies (GTO, Best-SWL) park at
+        infinity; the simulator still syncs detector counters at exit.
+        Families with per-epoch state (CCWS decay, statPCAL bandwidth
+        probe) fire every low-cutoff epoch."""
+        return 1 << 62
+
+    def _low_epoch_after(self, li: int) -> int:
+        low = self.det.cfg.low_epoch
+        return (li // low + 1) * low
+
     def num_allowed(self) -> int:
         return int(self.allowed_mask.sum())
+
+    # -- batched-engine adoption -------------------------------------------
+    def adopt_mask_rows(self, allowed_row: np.ndarray,
+                        isolated_row: np.ndarray,
+                        bypass_row: np.ndarray) -> None:
+        """Re-point the cached masks at rows of the batched engine's
+        stacked planes (current state is copied in). Mask updates are
+        in-place everywhere, so object writes (``on_warp_done`` rebuilds)
+        and batch-kernel writes land in the same memory."""
+        allowed_row[:] = self.allowed_mask
+        isolated_row[:] = self.isolated_mask
+        bypass_row[:] = self.bypass_mask
+        self.allowed_mask = allowed_row
+        self.isolated_mask = isolated_row
+        self.bypass_mask = bypass_row
+
+    def _fin_row(self, finished) -> np.ndarray:
+        """Full-width finished flags (trigger checks index by raw wid)."""
+        fin = np.zeros(self.n, bool)
+        f = np.asarray(finished, bool)
+        fin[:len(f)] = f
+        return fin
 
 
 class GTOPolicy(BasePolicy):
@@ -100,10 +144,10 @@ class BestSWLPolicy(BasePolicy):
         self._rebuild_masks()
 
     def _rebuild_masks(self) -> None:
-        m = np.zeros(self.n, bool)
+        m = self.allowed_mask
+        m[:] = False
         if self.allowed:
             m[list(self.allowed)] = True
-        self.allowed_mask = m
         self.mask_version += 1
 
     def on_warp_done(self, wid: int) -> None:
@@ -133,36 +177,34 @@ class CCWSPolicy(BasePolicy):
         self.bump = bump
         self.budget = budget_per_warp * num_warps
         self.blocked: set = set()
+        self._base1 = np.full(1, base_score, np.int64)
+        self._budget1 = np.full(1, self.budget, np.int64)
 
     def on_mem_event(self, wid: int, event: str) -> None:
         if event == "vta_hit":
             self.score[wid] += self.bump
 
+    def adopt_score_row(self, score_row: np.ndarray) -> None:
+        """Re-point the LLS scores at a batched-plane row. The decay is
+        in-place, so the C stepper's score pointer stays valid forever."""
+        score_row[:] = self.score
+        self.score = score_row
+
+    def next_epoch_after(self, li: int) -> int:
+        return self._low_epoch_after(li)     # decay runs every epoch
+
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
-        # decay
-        self.score = np.maximum(self.base,
-                                self.score - np.maximum(1, self.score // 8))
         fin = np.asarray(finished, bool)
+        alive = np.zeros(self.n, bool)
         if active is None:                  # simulator fast path: all warps
-            act = np.arange(len(fin))
+            alive[:len(fin)] = ~fin
         else:
             act = np.asarray(list(active), np.int64)
-        alive = act[~fin[act]]
-        # stable argsort on -score == the old stable sorted(key=-score),
-        # minus the per-epoch Python key-lambda cost (this runs every 50
-        # instructions on the hot path)
-        order = alive[np.argsort(-self.score[alive], kind="stable")]
-        self.blocked.clear()
-        run_sum = 0
-        first = order[0] if len(order) else -1
-        for w in order:
-            run_sum += int(self.score[w])
-            if run_sum > self.budget and w != first:
-                self.blocked.add(int(w))
-        m = np.ones(self.n, bool)
-        if self.blocked:
-            m[list(self.blocked)] = False
-        self.allowed_mask = m
+            alive[act[~fin[act]]] = True
+        blocked = _epoch.ccws_tick(self.score[None], self._base1,
+                                   self._budget1, alive[None],
+                                   self.allowed_mask[None], _epoch.IDX0)
+        self.blocked = set(map(int, np.flatnonzero(blocked[0])))
         self.mask_version += 1
 
 
@@ -175,27 +217,52 @@ class StatPCALPolicy(BestSWLPolicy):
 
     def __init__(self, num_warps, detector, limit: int = 48,
                  util_threshold: float = 0.6):
-        self.bypass_active = False
+        self._bypass1 = np.zeros(1, bool)
+        self._thresh1 = np.full(1, util_threshold, np.float64)
+        self._base_mask = np.zeros(num_warps, bool)
         self.util_threshold = util_threshold
         super().__init__(num_warps, detector, limit)
 
+    @property
+    def bypass_active(self) -> bool:
+        return bool(self._bypass1[0])
+
+    @bypass_active.setter
+    def bypass_active(self, value: bool) -> None:
+        self._bypass1[0] = value
+
+    def adopt_statpcal_rows(self, bypass1: np.ndarray, thresh1: np.ndarray,
+                            base_row: np.ndarray) -> None:
+        bypass1[:] = self._bypass1
+        thresh1[:] = self._thresh1
+        base_row[:] = self._base_mask
+        self._bypass1 = bypass1
+        self._thresh1 = thresh1
+        self._base_mask = base_row
+
     def _rebuild_masks(self) -> None:
-        m = np.zeros(self.n, bool)
+        bm = self._base_mask
+        bm[:] = False
         if self.allowed:
-            m[list(self.allowed)] = True
+            bm[list(self.allowed)] = True
         if self.bypass_active:
-            self.allowed_mask = np.ones(self.n, bool)
-            self.bypass_mask = ~m
+            self.allowed_mask[:] = True
+            self.bypass_mask[:] = ~bm
         else:
-            self.allowed_mask = m
-            self.bypass_mask = np.zeros(self.n, bool)
+            self.allowed_mask[:] = bm
+            self.bypass_mask[:] = False
         self.mask_version += 1
 
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
-        was = self.bypass_active
-        self.bypass_active = mem_util < self.util_threshold
-        if self.bypass_active != was:
-            self._rebuild_masks()
+        changed = _epoch.statpcal_tick(
+            self._bypass1, np.asarray([mem_util], np.float64),
+            self._thresh1, self._base_mask[None], self.allowed_mask[None],
+            self.bypass_mask[None], _epoch.IDX0)
+        if changed[0]:
+            self.mask_version += 1
+
+    def next_epoch_after(self, li: int) -> int:
+        return self._low_epoch_after(li)     # bandwidth probe every epoch
 
 
 @dataclasses.dataclass
@@ -209,21 +276,46 @@ class CIAOPolicy(BasePolicy):
 
     The per-warp V (active) and I (isolated) bits ARE the cached masks:
     ``allowed_mask[w]`` is V, ``isolated_mask[w]`` is I. ``flags`` stays
-    available as a read-only snapshot for tools and tests."""
+    available as a read-only snapshot for tools and tests. The
+    reverse-order reactivation stacks are fixed (n,)-deep LIFO arrays
+    (a warp is on each stack at most once) so the epoch kernels can stack
+    them across cells; ``stall_stack``/``isolate_stack`` remain list
+    views for tools and tests."""
 
     def __init__(self, num_warps, detector, mode: str = "c"):
         super().__init__(num_warps, detector)
         assert mode in ("p", "t", "c")
         self.mode = mode
         self.name = f"ciao-{mode}"
-        self.stall_stack: List[int] = []      # reverse-order reactivation
-        self.isolate_stack: List[int] = []
+        self._stall = np.full(num_warps, NO_WARP, np.int64)
+        self._stall_len = np.zeros(1, np.int64)
+        self._iso = np.full(num_warps, NO_WARP, np.int64)
+        self._iso_len = np.zeros(1, np.int64)
 
     # -- state queries ------------------------------------------------------
     @property
     def flags(self) -> List[WarpFlags]:
         return [WarpFlags(int(v), int(i)) for v, i
                 in zip(self.allowed_mask, self.isolated_mask)]
+
+    @property
+    def stall_stack(self) -> List[int]:
+        return [int(w) for w in self._stall[:int(self._stall_len[0])]]
+
+    @property
+    def isolate_stack(self) -> List[int]:
+        return [int(w) for w in self._iso[:int(self._iso_len[0])]]
+
+    def adopt_ciao_rows(self, stall_row: np.ndarray, stall_len: np.ndarray,
+                        iso_row: np.ndarray, iso_len: np.ndarray) -> None:
+        stall_row[:] = self._stall
+        stall_len[:] = self._stall_len
+        iso_row[:] = self._iso
+        iso_len[:] = self._iso_len
+        self._stall = stall_row
+        self._stall_len = stall_len
+        self._iso = iso_row
+        self._iso_len = iso_len
 
     # -- Algorithm 1 --------------------------------------------------------
     # IRS decisions use the *high-epoch windowed* snapshot (Eq. 1 over the
@@ -238,7 +330,9 @@ class CIAOPolicy(BasePolicy):
     def _alive_mask(self, active, finished) -> np.ndarray:
         fin = np.asarray(finished, bool)
         if active is None:
-            return self.allowed_mask[:len(fin)] & ~fin
+            m = np.zeros(self.n, bool)
+            m[:len(fin)] = self.allowed_mask[:len(fin)] & ~fin
+            return m
         act = np.asarray(active, np.int64)
         m = np.zeros(self.n, bool)
         m[act[self.allowed_mask[act] & ~fin[act]]] = True
@@ -254,61 +348,24 @@ class CIAOPolicy(BasePolicy):
         # actions persist until the trigger's rate dilutes below low-cutoff
         # or the trigger finishes — matching the paper's phase-granular
         # behaviour (Fig. 9) and preventing isolate/un-isolate oscillation.
-        cfg = self.det.cfg
-        n_act = self._n_active(active, finished)
-        # reactivate stalled warps, newest first (lines 4-10)
-        if self.stall_stack:
-            w = self.stall_stack[-1]
-            k = self.det.stall_trigger(w)
-            if k == NO_WARP or finished[k] or \
-                    self.det.irs(k, n_act) <= cfg.low_cutoff:
-                self.stall_stack.pop()
-                self.allowed_mask[w] = True
-                self.mask_version += 1
-                self.det.clear_stall(w)
-        # un-redirect isolated warps, newest first (lines 11-19)
-        if self.isolate_stack:
-            w = self.isolate_stack[-1]
-            if not self.allowed_mask[w]:
-                return    # stalled while isolated: reactivate first
-            k = self.det.isolation_trigger(w)
-            if k == NO_WARP or finished[k] or \
-                    self.det.irs(k, n_act) <= cfg.low_cutoff:
-                self.isolate_stack.pop()
-                self.isolated_mask[w] = False
-                self.mask_version += 1
-                self.det.clear_isolation(w)
+        n_act = np.asarray([self._n_active(active, finished)], np.int64)
+        changed = _epoch.ciao_low_tick(
+            self.det._pl, self._stall[None], self._stall_len,
+            self._iso[None], self._iso_len, self.allowed_mask[None],
+            self.isolated_mask[None], self._fin_row(finished)[None],
+            n_act, _epoch.IDX0)
+        if changed[0]:
+            self.mask_version += 1
 
     def high_epoch_tick(self, active, finished) -> None:
-        cfg = self.det.cfg
-        alive = np.flatnonzero(self._alive_mask(active, finished)).tolist()
-        if len(alive) <= 1:
-            return
-        # most-interfered active warp first (lines 20-28; one action/epoch)
-        scored = sorted(alive, key=lambda w: -self.det.irs_high(w))
-        for i in scored:
-            if self.det.irs_high(i) <= cfg.high_cutoff:
-                break
-            j = self.det.most_interfering(i)
-            if j == NO_WARP or j == i or finished[j]:
-                continue
-            if self.mode in ("p", "c") and not self.isolated_mask[j] \
-                    and self.allowed_mask[j]:
-                self.isolated_mask[j] = True
-                self.mask_version += 1
-                self.det.record_isolation(j, i)
-                self.isolate_stack.append(int(j))
-                return
-            if self.mode in ("t", "c") and self.allowed_mask[j] \
-                    and (self.isolated_mask[j] or self.mode == "t"):
-                if sum(1 for w in alive if w != j) < 1:
-                    return
-                self.allowed_mask[j] = False
-                self.mask_version += 1
-                self.det.record_stall(j, i)
-                self.stall_stack.append(int(j))
-                return
-        return
+        changed = _epoch.ciao_high_tick_cell(
+            self.det._pl, 0, self._stall[None], self._stall_len,
+            self._iso[None], self._iso_len, self.allowed_mask[None],
+            self.isolated_mask[None], self._fin_row(finished)[None],
+            self._alive_mask(active, finished),
+            self.mode in ("p", "c"), self.mode in ("t", "c"))
+        if changed:
+            self.mask_version += 1
 
     def stall_directly(self, j: int, trigger: int) -> bool:
         """§III-C: stall an interferer whose redirection stopped being
@@ -320,7 +377,9 @@ class CIAOPolicy(BasePolicy):
         self.allowed_mask[j] = False
         self.mask_version += 1
         self.det.record_stall(j, trigger)
-        self.stall_stack.append(int(j))
+        sl = int(self._stall_len[0])
+        self._stall[sl] = j
+        self._stall_len[0] = sl + 1
         return True
 
     def epoch_tick(self, active, finished, mem_util=0.0) -> None:
@@ -331,6 +390,19 @@ class CIAOPolicy(BasePolicy):
             self.low_epoch_tick(active, finished)
         if high:
             self.high_epoch_tick(active, finished)
+
+    def next_epoch_after(self, li: int) -> int:
+        # empty reactivation stacks -> low-cutoff epochs are provably
+        # no-ops (Algorithm 1 lines 4-19 touch nothing, the low-window
+        # snapshot feeds no decision), so skip to the next high-cutoff
+        # boundary; stacks only grow at high-epoch actions, so this is
+        # exact. Same table the batched engine precomputes.
+        cfg = self.det.cfg
+        low, high = cfg.low_epoch, cfg.high_epoch
+        if int(self._stall_len[0]) or int(self._iso_len[0]) \
+                or high <= low or high % low != 0:
+            return (li // low + 1) * low
+        return (li // high + 1) * high
 
 
 def make_policy(name: str, num_warps: int, detector: InterferenceDetector,

@@ -9,13 +9,15 @@ Every benchmark used to hand-roll its own sweep loop around
 * :func:`run_grid` — expands the grid into cells and runs them through
   one of three engines (``engine=`` argument):
 
-  - ``"batched"`` — group compatible single-SM cells (same SimConfig,
-    batchable per :func:`repro.core.batched.supports_config`), dispatch
-    the groups to the :class:`~repro.core.batched.BatchedSMEngine`
-    lockstep engine in-process, and run whatever does not batch
-    (multi-SM chips, queued-L2/MSHR-gated variants) per cell. Best-SWL
-    / statPCAL offline limit sweeps are flattened into the batch (one
-    subcell per limit) and reduced afterwards.
+  - ``"batched"`` — group compatible cells (same SimConfig + GPU shape,
+    batchable per :func:`repro.core.batched.supports_config` — this
+    includes multi-SM chips, stacked as (SM × cell) rows over shared
+    L2/DRAM planes), dispatch the groups to the
+    :class:`~repro.core.batched.BatchedSMEngine` lockstep engine
+    in-process, and run whatever does not batch (queued-L2/MSHR-gated
+    variants) per cell. Best-SWL / statPCAL offline limit sweeps are
+    flattened into the batch (one subcell per limit) and reduced
+    afterwards.
   - ``"process"`` — the spawn-pool fan-out (``processes`` workers, spawn
     context so no JAX fork hazards), the pre-batched path.
   - ``"auto"`` (default) — ``"batched"`` when at least
@@ -33,7 +35,9 @@ Every benchmark used to hand-roll its own sweep loop around
   batched group-builder ``load_workload`` instead of regenerating
   (trace generation costs ~100ms/workload; an npz load is ~10x
   cheaper), with atomic writes so concurrent spawn workers never see a
-  torn file.
+  torn file. Behind it sits the *shipped* curated set
+  (:mod:`repro.workloads.curated`): checksum-manifested ``.npz`` files
+  committed to the repo, so cross-machine sweeps load identical traces.
 
 Example::
 
@@ -159,6 +163,12 @@ def _cached_workload(name: str, seed: int, scale: float):
         if path.exists():
             with contextlib.suppress(Exception):
                 return load_workload(path)
+    # the shipped, checksum-manifested curated set (cross-machine
+    # reproducibility); $REPRO_NO_CURATED skips it
+    from repro.workloads.curated import load_curated
+    wl = load_curated(name, seed, scale)
+    if wl is not None:
+        return wl
     wl = make_workload(name, seed=seed, scale=scale)
     if path is not None:
         tmp = cache / f".{name}-s{seed}-x{scale:g}.{os.getpid()}.tmp.npz"
@@ -217,8 +227,8 @@ def expand_grid(grid: ExperimentGrid) -> List[_Cell]:
 
 def _batchable(cell: _Cell) -> bool:
     from repro.core.batched import supports_config
-    return cell.gpu is None and \
-        supports_config(cell.cfg if cell.cfg is not None else SimConfig())
+    return supports_config(
+        cell.cfg if cell.cfg is not None else SimConfig(), cell.gpu)
 
 
 # token-plane budget per batched chunk: unique workloads are stacked
@@ -226,22 +236,42 @@ def _batchable(cell: _Cell) -> bool:
 _BATCH_TOKEN_BUDGET = 192 * 1024 * 1024
 _BATCH_MAX_CELLS = 256
 
+# time breakdown of the most recent batched run_grid (bench_batched
+# reports it so epoch-path regressions stay attributable):
+#   group_build_s — workload load + sweep flattening + chunking
+#   engine_build_s — state stacking inside BatchedSMEngine
+#   stepper_s / drain_s — in-stepper vs pause-drain time
+_LAST_BATCHED_PERF: Dict[str, float] = {}
+
+
+def last_batched_perf() -> Dict[str, float]:
+    """Breakdown of the last batched ``run_grid`` (empty if none ran)."""
+    return dict(_LAST_BATCHED_PERF)
+
 
 def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
     """Run batchable cells through the lockstep engine: flatten Best-SWL
-    / statPCAL limit sweeps into per-limit subcells, group by SimConfig,
-    chunk groups under a token-plane memory budget, run each chunk as
-    one batch, and reduce the sweeps back (first-best on ties, exactly
-    like ``run_policy_sweep``)."""
+    / statPCAL limit sweeps into per-limit subcells, group by (SimConfig,
+    GPU shape), chunk groups under a token-plane memory budget, run each
+    chunk as one batch, and reduce the sweeps back (first-best on ties,
+    exactly like ``run_policy_sweep`` / ``run_gpu_policy_sweep``)."""
+    import time as _time
+
     from repro.core.batched import BatchCell, BatchedSMEngine
     backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
-    # (cell index, limit ordinal, BatchCell); cfg key groups chunks
+    perf = _LAST_BATCHED_PERF
+    perf.clear()
+    perf.update(group_build_s=0.0, engine_build_s=0.0,
+                stepper_s=0.0, drain_s=0.0, rounds=0.0, batches=0.0)
+    t0 = _time.perf_counter()
+    # (cell index, limit ordinal, BatchCell); (cfg, gpu) groups chunks
     groups: Dict[str, List[Tuple[int, int, BatchCell]]] = {}
     for i, cell in enumerate(cells):
         wl = _cached_workload(cell.workload,
                               workload_seed(cell.seed, cell.workload),
                               cell.scale)
-        key = repr(cell.cfg) if cell.cfg is not None else "default"
+        key = (repr(cell.cfg) if cell.cfg is not None else "default",
+               repr(cell.gpu))
         sub = groups.setdefault(key, [])
         if cell.policy in ("best-swl", "statpcal"):
             limits = ([wl.n_wrp] if getattr(wl, "n_wrp", 0)
@@ -251,16 +281,26 @@ def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
                                             {"limit": lim})))
         else:
             sub.append((i, 0, BatchCell(wl, cell.policy)))
+    chunks = []
+    for key, sub in groups.items():
+        first = cells[sub[0][0]]
+        for chunk in _chunk_batch(sub, first.gpu):
+            chunks.append((first.cfg, first.gpu, chunk))
+    perf["group_build_s"] += _time.perf_counter() - t0
 
     results: Dict[int, List] = {}
-    for key, sub in groups.items():
-        cfg = cells[sub[0][0]].cfg
-        for chunk in _chunk_batch(sub):
-            eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
-                                  backend=backend)
-            for (i, j, _), res in zip(chunk, eng.run()):
-                results.setdefault(i, []).append((j, res))
+    for cfg, gpu, chunk in chunks:
+        eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
+                              backend=backend, gpu=gpu)
+        for (i, j, _), res in zip(chunk, eng.run()):
+            results.setdefault(i, []).append((j, res))
+        perf["engine_build_s"] += eng.perf["build_s"]
+        perf["stepper_s"] += eng.perf["stepper_s"]
+        perf["drain_s"] += eng.perf["drain_s"]
+        perf["rounds"] += eng.perf["rounds"]
+        perf["batches"] += 1
 
+    t0 = _time.perf_counter()
     records = []
     for i, cell in enumerate(cells):
         sweep = sorted(results[i])
@@ -271,25 +311,42 @@ def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
         wl = _cached_workload(cell.workload,
                               workload_seed(cell.seed, cell.workload),
                               cell.scale)
-        records.append(RunRecord(
-            grid=cell.grid, workload=cell.workload, klass=wl.klass,
-            policy=cell.policy, variant=cell.variant, num_sms=1,
-            seed=cell.seed, scale=cell.scale,
-            ipc=best.ipc, cycles=best.cycles,
-            instructions=best.instructions,
-            l1_hit_rate=best.l1_hit_rate, vta_hits=best.vta_hits,
-            mean_active_warps=best.mean_active_warps,
-            stats=dict(best.stats),
-            pairs=[list(p) for p in best.pairs]))
+        if cell.gpu is not None:
+            records.append(RunRecord(
+                grid=cell.grid, workload=cell.workload, klass=wl.klass,
+                policy=cell.policy, variant=cell.variant,
+                num_sms=cell.gpu.num_sms, seed=cell.seed,
+                scale=cell.scale,
+                ipc=best.ipc, cycles=best.cycles,
+                instructions=best.instructions,
+                l1_hit_rate=best.l1_hit_rate, vta_hits=best.vta_hits,
+                mean_active_warps=best.mean_active_warps,
+                stats=dict(best.mem_stats),
+                per_sm_ipc=[r.ipc for r in best.per_sm]))
+        else:
+            records.append(RunRecord(
+                grid=cell.grid, workload=cell.workload, klass=wl.klass,
+                policy=cell.policy, variant=cell.variant, num_sms=1,
+                seed=cell.seed, scale=cell.scale,
+                ipc=best.ipc, cycles=best.cycles,
+                instructions=best.instructions,
+                l1_hit_rate=best.l1_hit_rate, vta_hits=best.vta_hits,
+                mean_active_warps=best.mean_active_warps,
+                stats=dict(best.stats),
+                pairs=[list(p) for p in best.pairs]))
+    perf["group_build_s"] += _time.perf_counter() - t0
     return records
 
 
-def _chunk_batch(sub: Sequence[Tuple]) -> List[List[Tuple]]:
+def _chunk_batch(sub: Sequence[Tuple],
+                 gpu: Optional[GPUConfig] = None) -> List[List[Tuple]]:
     """Split one config group into engine-sized chunks: the stacked
-    token plane (unique workloads × num_warps × longest stream) stays
-    under ``_BATCH_TOKEN_BUDGET`` and chunks hold at most
+    token plane (unique workloads × num_warps × longest stream; one
+    slice per SM for multi-SM groups) stays under
+    ``_BATCH_TOKEN_BUDGET`` and chunks hold at most
     ``_BATCH_MAX_CELLS`` cells. Cells arrive in grid order, so
     same-workload cells stay contiguous and padding stays tight."""
+    sm_factor = gpu.num_sms if gpu is not None else 1
     chunks: List[List[Tuple]] = []
     cur: List[Tuple] = []
     uniq: set = set()
@@ -300,7 +357,7 @@ def _chunk_batch(sub: Sequence[Tuple]) -> List[List[Tuple]]:
         new_uniq = uniq | {wid}
         new_len = max(max_len,
                       max((len(k) for k, _ in wl.traces), default=1))
-        est = len(new_uniq) * len(wl.traces) * new_len * 8
+        est = len(new_uniq) * len(wl.traces) * new_len * 8 * sm_factor
         if cur and (len(cur) >= _BATCH_MAX_CELLS
                     or est > _BATCH_TOKEN_BUDGET):
             chunks.append(cur)

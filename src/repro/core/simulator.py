@@ -15,9 +15,14 @@ is a vectorized mask pick (allowed & ~done & ready) instead of a per-warp
 (one token per dispatch: batched ALU run, or a memory op with the
 dependent-use bit baked in), and the policy masks
 (:mod:`repro.core.policies`) are cached between the epoch /
-warp-completion events that can change them. The full per-access model is
-fused into :meth:`SMSimulator.advance` (see its docstring). Behavior is
-bit-identical to the seed per-instruction loop — pinned by
+warp-completion events that can change them. The epoch-boundary decision
+math the ``epoch_tick`` calls reach — detector IRS snapshots, CCWS decay,
+statPCAL bypass, CIAO Algorithm 1 — is the batch-first kernel set of
+:mod:`repro.core.epoch`, which this scalar path exercises as batch-of-1
+views and the batched engine (:mod:`repro.core.batched`) runs over whole
+grids at once: one implementation, two batch widths. The full per-access
+model is fused into :meth:`SMSimulator.advance` (see its docstring).
+Behavior is bit-identical to the seed per-instruction loop — pinned by
 ``tests/test_equivalence.py`` against golden seed-core snapshots.
 
 The post-L1 :class:`~repro.core.memory.MemoryHierarchy` may be private
@@ -183,7 +188,6 @@ class SMSimulator:
         self._last_instr = 0
         self._last_cycle = 0
         self._window_mark = self.timeline_every
-        self._epoch_counter = 0
         self._all_wids = np.arange(n)
         # Each per-warp trace is pre-compiled (vectorized) into a token
         # stream consumed one token per dispatch — see
@@ -205,6 +209,13 @@ class SMSimulator:
         self._byp_list = [False] * n
         self._cand = np.zeros(n, bool)        # scratch for scheduler scans
         self._mshr_gate = cfg.onchip.mshr_gate
+        # per-cell epoch next-trigger table (policy-informed; persists
+        # across advance() slices): passive policies park at infinity,
+        # CIAO with empty reactivation stacks skips to the next
+        # high-cutoff boundary — identical decisions, 20x fewer
+        # epoch_tick trips on idle CIAO cells (the batched engine
+        # precomputes the same table)
+        self._next_epoch = self.policy.next_epoch_after(0)
         self._begun = True
 
     timeline_every: int = 20_000
@@ -378,8 +389,6 @@ class SMSimulator:
 
         cycle, instr = self.cycle, self.instr
         remaining = self.remaining
-        epoch_counter = self._epoch_counter
-        next_epoch = (epoch_counter + 1) * low_epoch
         window_mark = self._window_mark
         last_instr, last_cycle = self._last_instr, self._last_cycle
         mask_ver = self._mask_version
@@ -389,6 +398,7 @@ class SMSimulator:
         li = det.inst_total                       # local mirrors; irs_inst
         irs_off = li - det.irs_inst               # tracks li minus an offset
                                                   # that only aging changes
+        next_epoch = self._next_epoch
         last_wid = policy.last_wid
         if last_wid is None:
             last_wid = -1
@@ -627,8 +637,6 @@ class SMSimulator:
                     byp = policy.bypass_mask.tolist()
 
             if li >= next_epoch:
-                epoch_counter = li // low_epoch
-                next_epoch = (epoch_counter + 1) * low_epoch
                 det.inst_total, det.irs_inst = li, li - irs_off
                 if fast_l2:
                     util = dram_requests * dram_gap / \
@@ -639,6 +647,9 @@ class SMSimulator:
                     util = mem_sys.utilization(cycle)
                 epoch_tick(None, done, util)
                 irs_off = li - det.irs_inst      # aging moves this
+                # re-read the trigger table after the tick (stack pushes
+                # switch CIAO back to low-epoch granularity)
+                next_epoch = policy.next_epoch_after(li)
                 if policy.mask_version != mask_ver:
                     mask_ver = policy.mask_version
                     avail_np[:] = policy.allowed_mask[:n] & ~done
@@ -675,7 +686,7 @@ class SMSimulator:
         policy.last_wid = last_wid if last_wid >= 0 else None
         self.cycle, self.instr = cycle, instr
         self.remaining = remaining
-        self._epoch_counter = epoch_counter
+        self._next_epoch = next_epoch
         self._window_mark = window_mark
         self._last_instr, self._last_cycle = last_instr, last_cycle
         self._mask_version = mask_ver

@@ -155,25 +155,72 @@ def test_mixed_batch_matches_scalar(seed):
             assert dataclasses.asdict(res) == dataclasses.asdict(ref)
 
 
+# -------------------------------------------------------------- multi-SM
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_sm_batch_matches_gpusim(backend):
+    """A 2-SM shared-L2 batch (mixed policies, incl. the smem and CCWS
+    paths) is bit-exact per cell against per-cell GPUSimulator runs —
+    the (SM x cell) stacking with shared post-L1 planes must replay the
+    chip's slice-interleaved schedule exactly."""
+    from repro.core.gpu import GPUConfig, GPUSimulator
+    gpu = GPUConfig(num_sms=2)
+    wls = {n: make_workload(n, seed=7, scale=0.05)
+           for n in ("syrk", "bicg", "nw")}
+    cells = [("syrk", "gto"), ("syrk", "ciao-c"), ("bicg", "ccws"),
+             ("nw", "ciao-p"), ("bicg", "statpcal")]
+    got = BatchedSMEngine([BatchCell(wls[n], p) for n, p in cells],
+                          backend=backend, gpu=gpu).run()
+    for (n, p), g in zip(cells, got):
+        ref = GPUSimulator(wls[n], p, gpu=gpu).run()
+        assert dataclasses.asdict(g) == dataclasses.asdict(ref), (n, p)
+
+
+def test_multi_sm_loose_scheduler_and_partition():
+    """The CTA-placement variants (loose scheduler, partitioned
+    workload) batch bit-exactly too."""
+    from repro.core.gpu import GPUConfig, GPUSimulator
+    wl = make_workload("bicg", seed=3, scale=0.05)
+    for gpu in (GPUConfig(num_sms=2, cta_scheduler="loose"),
+                GPUConfig(num_sms=2, replicate=False)):
+        ref = GPUSimulator(wl, "ciao-c", gpu=gpu).run()
+        for backend in BACKENDS:
+            got = BatchedSMEngine([BatchCell(wl, "ciao-c")],
+                                  backend=backend, gpu=gpu).run()[0]
+            assert dataclasses.asdict(got) == dataclasses.asdict(ref)
+
+
 # ---------------------------------------------------------------- runner
 def test_runner_engines_agree(tmp_path, monkeypatch):
-    """batched == process == auto records, including a multi-SM variant
-    cell that must fall back to per-cell execution, and Best-SWL cells
-    whose offline limit sweep the batched path flattens and reduces."""
+    """batched == process == auto records, including an MSHR-gated
+    variant cell that must fall back to per-cell execution, and Best-SWL
+    cells whose offline limit sweep the batched path flattens and
+    reduces."""
     monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path))
-    from repro.core.gpu import GPUConfig
+    from repro.core.onchip import OnChipConfig
     from repro.core.runner import ExperimentGrid, run_grid
+    gated = SimConfig(onchip=OnChipConfig(mshr_gate=True))
     grid = ExperimentGrid(name="t", workloads=("syrk", "kmn"),
                           policies=("gto", "ciao-c", "best-swl"),
-                          scale=0.06, best_swl_limits=(2, 8))
+                          scale=0.06, best_swl_limits=(2, 8),
+                          variants={"base": None, "gated": gated})
     r_proc = run_grid(grid, engine="process")
     r_batch = run_grid(grid, engine="batched")
     r_auto = run_grid(grid, engine="auto")
     assert r_proc == r_batch == r_auto
 
+
+def test_runner_multi_sm_grid_batches(tmp_path, monkeypatch):
+    """A 2-SM shared-L2 grid goes through the batched engine (no
+    fallback) and its records equal per-cell execution."""
+    monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path))
+    from repro.core.gpu import GPUConfig
+    from repro.core.runner import (ExperimentGrid, _batchable,
+                                   expand_grid, run_grid)
     gpu_grid = ExperimentGrid(name="t2", workloads=("syrk",),
-                              policies=("gto", "ciao-c"), scale=0.06,
+                              policies=("gto", "ciao-c", "best-swl"),
+                              scale=0.06, best_swl_limits=(2, 8),
                               gpu=GPUConfig(num_sms=2))
+    assert all(_batchable(c) for c in expand_grid(gpu_grid))
     assert run_grid(gpu_grid, engine="batched") == \
         run_grid(gpu_grid, engine="process")
 

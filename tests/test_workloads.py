@@ -187,3 +187,47 @@ def test_flashattn_causal_skew():
     wl = make_workload("flashattn", seed=0, scale=0.5)
     lens = [len(k) for k, _ in wl.traces[:12]]   # head 0's q rows
     assert lens == sorted(lens) and lens[0] < lens[-1]
+
+
+# ----------------------------------------------------------- curated set
+def test_curated_manifest_intact():
+    """The shipped curated trace set matches its checksum manifest and
+    loads into the same traces the generators produce (cross-machine
+    sweeps must see identical workloads)."""
+    from repro.workloads import curated
+    assert curated.verify_manifest() == []
+    files = curated.load_manifest()
+    assert files, "curated set must ship at least one workload"
+    # spot-check one entry end to end against fresh generation
+    name, seed, scale = "syrk", None, curated.DEFAULT_SCALE
+    from repro.core.runner import workload_seed
+    seed = workload_seed(curated.DEFAULT_SEED, name)
+    wl = curated.load_curated(name, seed, scale)
+    assert wl is None  # disabled by conftest's REPRO_NO_CURATED
+    import os
+    os.environ.pop("REPRO_NO_CURATED")
+    try:
+        wl = curated.load_curated(name, seed, scale)
+        ref = make_workload(name, seed=seed, scale=scale)
+        assert wl is not None and len(wl.traces) == len(ref.traces)
+        for (k0, a0), (k1, a1) in zip(wl.traces, ref.traces):
+            assert np.array_equal(k0, k1) and np.array_equal(a0, a1)
+    finally:
+        os.environ["REPRO_NO_CURATED"] = "1"
+
+
+def test_curated_checksum_mismatch_raises(tmp_path, monkeypatch):
+    """A tampered curated file must fail loudly, not feed stale traces."""
+    import json as _json
+
+    from repro.workloads import curated
+    monkeypatch.delenv("REPRO_NO_CURATED", raising=False)
+    monkeypatch.setenv("REPRO_CURATED_DIR", str(tmp_path))
+    fname = "kmn-s1-x0.1.npz"
+    (tmp_path / fname).write_bytes(b"not an npz")
+    (tmp_path / "MANIFEST.json").write_text(_json.dumps(
+        {"version": 1, "files": {fname: "0" * 64}}))
+    with pytest.raises(ValueError, match="checksum"):
+        curated.load_curated("kmn", 1, 0.1)
+    assert curated.verify_manifest(tmp_path) == [
+        f"checksum mismatch: {fname}"]
