@@ -1,14 +1,17 @@
-"""PR-5 grid-throughput harness: batched lockstep engine vs the PR-2
-spawn-pool path, written to ``BENCH_PR5.json`` at the repo root.
+"""PR-6 grid-throughput harness: batched lockstep engine (C / numpy /
+jitted-XLA steppers) vs the PR-2 spawn-pool path, written to
+``BENCH_PR6.json`` at the repo root.
 
 Measures end-to-end ``run_grid`` wall time on two grids, interleaved
 best-of-N in one process (the container's absolute speed drifts ~2x
 between sessions, so only same-run ratios are meaningful):
 
 * the single-SM **fig8** grid (the paper's Fig. 8 policy × workload
-  sweep), three ways — ``pool`` (``engine="process"`` at ``--jobs``
+  sweep), four ways — ``pool`` (``engine="process"`` at ``--jobs``
   workers), ``batched`` (auto backend: the C stepper when a compiler is
-  available), and ``batched_numpy`` (the portable pure-numpy stepper);
+  available), ``batched_numpy`` (the portable pure-numpy stepper), and
+  ``batched_jax`` (``engine="jax"``: the jitted XLA while-loop stepper,
+  when jax imports);
 * a 2-SM shared-L2 **multi-SM** grid (the paper's multi-programmed
   contention setup) — ``pool`` vs ``batched``, the configuration the
   engine could not batch before PR 5.
@@ -18,25 +21,45 @@ reported — the speedup is meaningless unless the grids agree cell for
 cell. The headline ratio is pool wall time / batched wall time, i.e.
 grid-sweep throughput in cells/sec.
 
+**Compile vs steady state.** One-time costs are kept out of the timed
+windows for every backend alike: workload generation and the C
+stepper's ``cc`` invocation happen in the untimed warm-up, and the jax
+leg does one untimed warm run first so trace + XLA compilation are
+cached (``jax_backend`` keys its jit cache on the engine's static
+shape). The warm run's wall is recorded and ``compile_s`` is estimated
+as warm-run wall minus the best steady-state wall, reported per backend
+under ``results.*.compile_s`` — so regressions in compile time and in
+steady-state throughput are visible separately.
+
+On CPUs the jitted leg is bound by XLA:CPU's per-dispatch overhead
+(~microseconds x ~40 fused thunks x tens of thousands of lockstep
+iterations) and its wall is nearly independent of batch width; it
+exists for accelerator targets and very wide batches, not to beat the
+C stepper here. The honest CPU numbers land in the JSON either way.
+
 The batched runs also report a **time breakdown** (`breakdown`):
-``stepper_s`` (inside the C/numpy stepper), ``drain_s`` (vectorized
-pause-drain: epoch/policy math), ``engine_build_s`` (state stacking) and
-``group_build_s`` (workload load + sweep flattening + chunking) — so a
-future regression in the epoch path shows up as ``drain_s`` growth, not
-just a worse ratio.
+``stepper_s`` (inside the C/numpy/XLA stepper), ``drain_s`` (vectorized
+pause-drain: epoch/policy math; for the C path after the in-stepper
+next-trigger scan this is one final drain), ``engine_build_s`` (state
+stacking) and ``group_build_s`` (workload load + sweep flattening +
+chunking) — so a future regression in the epoch path shows up as
+``drain_s`` growth, not just a worse ratio.
 
 Usage::
 
     python -m benchmarks.bench_batched [--quick] [--repeats N]
                                        [--scale S] [--jobs N]
-                                       [--out BENCH_PR5.json]
+                                       [--out BENCH_PR6.json]
                                        [--floor-ratio R]
                                        [--floor-multism R]
+                                       [--floor-jax R]
 
 ``--floor-ratio R`` exits nonzero if the fig8 batched/pool throughput
 ratio falls below R — the CI guard against regressing the batched
-engine. ``--floor-multism`` guards the multi-SM ratio the same way.
-Ratios, not absolute rates, so noisy runners do not flap the job.
+engine. ``--floor-multism`` guards the multi-SM ratio and
+``--floor-jax`` the steady-state jax/pool ratio the same way (keep the
+jax floor a sanity bound, e.g. 0.25 — see the note above). Ratios, not
+absolute rates, so noisy runners do not flap the job.
 """
 from __future__ import annotations
 
@@ -50,7 +73,7 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import emit, header
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
             "syrk", "gesummv", "syr2k", "ii",          # SWS
@@ -93,13 +116,17 @@ def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
                 os.environ.pop("REPRO_BATCHED_BACKEND", None)
             else:
                 os.environ["REPRO_BATCHED_BACKEND"] = prev
-    perf = last_batched_perf() if engine == "batched" else {}
+    perf = last_batched_perf() if engine in ("batched", "jax") else {}
     return {"wall_s": wall, "records": records, "perf": perf}
 
 
-def _measure(grid, runs, repeats: int, jobs: int, label: str) -> Dict:
+def _measure(grid, runs, repeats: int, jobs: int, label: str,
+             warm_walls: Optional[Dict[str, float]] = None) -> Dict:
     """Interleaved best-of-N over the given (name, engine, backend)
-    runs; asserts every engine's records equal before reporting."""
+    runs; asserts every engine's records equal before reporting.
+    ``warm_walls`` maps run names to an untimed warm run's wall (one-time
+    trace/compile included); ``compile_s`` is that minus the steady
+    best, clamped at 0."""
     walls: Dict[str, List[float]] = {name: [] for name, _, _ in runs}
     breakdown: Dict[str, Dict] = {}
     ref_records = None
@@ -125,6 +152,10 @@ def _measure(grid, runs, repeats: int, jobs: int, label: str) -> Dict:
             "wall_s": best, "cells_per_s": n_cells / best,
             "all_walls_s": ws,
         }
+        if warm_walls and name in warm_walls:
+            warm = warm_walls[name]
+            out["results"][name]["warm_run_wall_s"] = warm
+            out["results"][name]["compile_s"] = max(warm - best, 0.0)
         emit(f"batched/{label}/{name}", 0.0,
              f"{n_cells / best:.2f}cells/s;wall={best:.2f}s")
     return out
@@ -140,13 +171,18 @@ def main() -> int:
                     help="trace scale (default 0.5, quick 0.2)")
     ap.add_argument("--jobs", type=int, default=2,
                     help="spawn-pool workers for the baseline")
-    ap.add_argument("--out", default="BENCH_PR5.json")
+    ap.add_argument("--out", default="BENCH_PR6.json")
     ap.add_argument("--floor-ratio", type=float, default=0.0,
                     help="fail if fig8 batched/pool ratio is below")
     ap.add_argument("--floor-multism", type=float, default=0.0,
                     help="fail if the multi-SM batched/pool ratio is below")
+    ap.add_argument("--floor-jax", type=float, default=0.0,
+                    help="fail if the steady-state jax/pool ratio is "
+                         "below (sanity bound; see module docstring)")
     ap.add_argument("--skip-numpy", action="store_true",
                     help="skip the pure-numpy stepper measurement")
+    ap.add_argument("--skip-jax", action="store_true",
+                    help="skip the jitted XLA stepper measurement")
     ap.add_argument("--skip-multism", action="store_true",
                     help="skip the 2-SM shared-L2 grid measurement")
     args = ap.parse_args()
@@ -177,10 +213,24 @@ def main() -> int:
             batch_size += 1     # n_wrp pins the sweep to one limit
     _cstep.available()
 
+    from repro.core import jax_backend
+    jax_on = not args.skip_jax and jax_backend.available()
+    warm_walls: Dict[str, float] = {}
+    if jax_on:
+        # untimed warm run: trace + XLA compile land here, cached for
+        # the steady-state passes (jit keyed on the static shape)
+        t0 = time.perf_counter()
+        _time_engine(grid, "jax", args.jobs)
+        warm_walls["batched_jax"] = time.perf_counter() - t0
+        emit("batched/fig8/jax_warm", 0.0,
+             f"wall={warm_walls['batched_jax']:.2f}s")
+
     runs = [("batched", "batched", "auto"), ("pool", "process", "")]
     if not args.skip_numpy:
         runs.append(("batched_numpy", "batched", "numpy"))
-    fig8 = _measure(grid, runs, repeats, args.jobs, "fig8")
+    if jax_on:
+        runs.append(("batched_jax", "jax", ""))
+    fig8 = _measure(grid, runs, repeats, args.jobs, "fig8", warm_walls)
 
     ms: Optional[Dict] = None
     ms_grid = None
@@ -211,6 +261,9 @@ def main() -> int:
         "batch_size": batch_size,
         "c_stepper": {"available": _cstep.available(),
                       "detail": _cstep.unavailable_reason()},
+        "jax_backend": {"available": jax_backend.available(),
+                        "measured": jax_on,
+                        "detail": jax_backend.unavailable_reason()},
         "results": fig8["results"],
         "breakdown": fig8["breakdown"],
     }
@@ -222,23 +275,33 @@ def main() -> int:
             "results": ms["results"], "breakdown": ms["breakdown"],
         }
 
-    ratio = doc["results"]["pool"]["wall_s"] / \
-        doc["results"]["batched"]["wall_s"]
+    pool_wall = doc["results"]["pool"]["wall_s"]
+    ratio = pool_wall / doc["results"]["batched"]["wall_s"]
     np_r = doc["results"].get("batched_numpy")
+    jax_r = doc["results"].get("batched_jax")
+    jax_ratio = (pool_wall / jax_r["wall_s"]) if jax_r else None
     ms_ratio = None
     if ms is not None:
         ms_ratio = ms["results"]["pool"]["wall_s"] / \
             ms["results"]["batched"]["wall_s"]
     doc["headline"] = {
         "ratio_vs_pool": ratio,
-        "numpy_ratio_vs_pool": (doc["results"]["pool"]["wall_s"]
-                                / np_r["wall_s"]) if np_r else None,
+        "numpy_ratio_vs_pool": (pool_wall / np_r["wall_s"])
+                               if np_r else None,
+        "jax_ratio_vs_pool": jax_ratio,
+        "jax_compile_s": jax_r.get("compile_s") if jax_r else None,
         "multi_sm_ratio_vs_pool": ms_ratio,
         "note": "ratio = best-of-N interleaved pool/batched wall time on "
                 "the same grid, records asserted equal; absolute "
-                "cells/sec drifts with the container",
+                "cells/sec drifts with the container. The jax leg is "
+                "steady-state (compile in the untimed warm run, "
+                "reported as compile_s); on XLA:CPU it is dispatch-"
+                "overhead bound and nearly batch-width independent — "
+                "see the module docstring.",
     }
     emit("batched/ratio", 0.0, f"{ratio:.2f}x")
+    if jax_ratio is not None:
+        emit("batched/ratio_jax", 0.0, f"{jax_ratio:.2f}x")
     if ms_ratio is not None:
         emit("batched/ratio_2sm", 0.0, f"{ms_ratio:.2f}x")
 
@@ -259,6 +322,14 @@ def main() -> int:
         print(f"# FAIL: multi-SM batched/pool ratio {ms_ratio:.2f}x "
               f"below floor {args.floor_multism:.2f}x")
         fail = True
+    if args.floor_jax and jax_ratio is not None \
+            and jax_ratio < args.floor_jax:
+        print(f"# FAIL: jax/pool steady-state ratio {jax_ratio:.2f}x "
+              f"below floor {args.floor_jax:.2f}x")
+        fail = True
+    elif args.floor_jax and jax_ratio is not None:
+        emit("batched/floor_jax", 0.0,
+             f"ok:{jax_ratio:.2f}x>={args.floor_jax:.2f}x")
     return 1 if fail else 0
 
 

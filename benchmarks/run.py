@@ -9,14 +9,16 @@ smoke test.
 
   python -m benchmarks.run [--only fig8,serving,...] [--scale 0.5]
                            [--jobs N] [--out DIR] [--quick]
-                           [--engine auto|batched|process]
+                           [--engine auto|batched|process|jax]
 
 ``--engine`` picks the runner execution engine for the grid sweeps:
 ``batched`` forces the in-process batched lockstep engine
-(``repro.core.batched``), ``process`` the spawn-pool fan-out, and
-``auto`` (default) batches wide grids — including multi-SM grids, which
-stack as (SM × cell) rows — and falls back per cell only for the
-queued-L2/MSHR-gated config corners.
+(``repro.core.batched``), ``process`` the spawn-pool fan-out, ``jax``
+the jitted XLA stepper for single-SM chunks (``repro.core.jax_backend``;
+other cells fall back to auto), and ``auto`` (default) batches wide
+grids — including multi-SM grids, which stack as (SM × cell) rows —
+and falls back per cell only for the queued-L2/MSHR-gated config
+corners.
 """
 from __future__ import annotations
 
@@ -58,7 +60,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced runner smoke grid, then exit")
     ap.add_argument("--engine", default="auto",
-                    choices=("auto", "batched", "process"),
+                    choices=("auto", "batched", "process", "jax"),
                     help="runner execution engine for grid sweeps")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

@@ -3,12 +3,17 @@
  * A direct transliteration of the scalar hot path in
  * repro/core/simulator.py::SMSimulator.advance, operating on the SAME
  * stacked batch arrays the numpy stepper uses (one row per cell). Each
- * call advances every live, unpaused cell until it reaches a pause
- * point — epoch boundary, warp completion, timeline sample, fully-
- * throttled stretch, or the cycle cap — where control returns to Python
- * so the real policy/detector objects replay the decision logic. Only
- * deterministic int64 arithmetic lives here; every float stays in
- * Python (bit-exactness contract, see tests/test_batched.py).
+ * call advances every live, unpaused cell until a slice boundary.
+ * Epoch boundaries, warp retirements, timeline samples and throttled
+ * stretches of the known policy families (CCWS, statPCAL, CIAO,
+ * Best-SWL rotation) are serviced HERE, in-stepper, as transliterations
+ * of the repro.core.epoch kernels; a cell pauses back into Python only
+ * for unknown policy subclasses (F_OBJECT / WD_OBJECT rows) and for
+ * row finalization. Decision floats follow the fixed-point contract of
+ * repro/core/epoch.py: integer counters below 2**53, each cutoff
+ * decision a single-rounding double compare (hits*act <> cutoff*win),
+ * so numpy and C agree bit-for-bit (tests/test_batched.py). Compile
+ * with -ffp-contract=off so no compare side is fused.
  *
  * Compiled on demand by repro/core/_cstep.py with the system C compiler
  * (no Python.h — driven through ctypes). Field order of Params must
@@ -26,8 +31,13 @@ enum {
     P_WARPDONE = 4,
     P_THROTTLE = 8,
     P_CAP = 16,   /* legacy: slice stops at the cycle cap use P_SLICE */
-    P_SLICE = 32  /* reached until[b] (slice boundary or cycle cap)   */
+    P_SLICE = 32, /* reached until[b] (slice boundary or cycle cap)   */
+    P_FINALIZE = 64 /* row completed in-stepper; Python only finalizes */
 };
+
+/* policy families / warp-done kinds (mirror repro.core.batched) */
+enum { F_PASSIVE = 0, F_CCWS = 1, F_STATP = 2, F_CIAO = 3, F_OBJECT = 4 };
+enum { WD_NOOP = 0, WD_SWL = 1, WD_STATP = 2, WD_OBJECT = 3 };
 
 #define HUGE_T ((i64)1 << 62)
 
@@ -70,6 +80,24 @@ typedef struct {
     u64 *det_ptrs, *score_ptrs;
     i64 *score_bump;
     i64 *pair_dense; /* B x (n+1) x n, row 0 = evictor==-1 guard */
+    /* ---- in-stepper epoch / warp-done / timeline servicing ---- */
+    i64 high_epoch, aging_high, stride_ok, timeline_every, tl_cap;
+    double low_cutoff, high_cutoff;
+    i8 *fam, *mode_p, *mode_t;          /* policy family / CIAO modes */
+    i8 *allowed_pl, *isolated_pl, *bypass_pl;   /* policy mask planes */
+    i8 *sp_bypass, *sp_base;            /* statPCAL mode + base set */
+    double *sp_thresh;
+    i64 *det_inst_total, *det_irs_inst, *irs_off;
+    i64 *low_idx, *high_idx, *low_base_inst, *high_base_inst;
+    i64 *high_crossings, *low_base_hits, *high_base_hits;
+    i64 *low_snap_hits, *high_snap_hits;
+    i64 *low_snap_win, *high_snap_win, *low_snap_act, *high_snap_act;
+    i64 *pair_list, *wid_sets;
+    i64 *ccws_base, *ccws_budget;
+    i64 *ciao_stall, *ciao_iso, *stall_len, *iso_len;
+    i64 *wd_kind, *swl_next, *remaining;
+    i64 *tl_cycle, *tl_act, *tl_n, *tl_last_instr, *tl_last_cycle;
+    double *tl_dipc;
 } Params;
 
 static i64 l1_set(const Params *p, i64 line)
@@ -160,6 +188,377 @@ static int vta_probe(const Params *p, i64 b, i64 wid, i64 line)
     return 1;
 }
 
+/* ------------- in-stepper epoch / warp-done / timeline service -------
+ * Per-row transliterations of the repro.core.epoch kernels. Each
+ * mirrors what BatchedSMEngine's vectorized drain would do for one row,
+ * at exactly the same point in the row's instruction stream. */
+
+/* re-derive the dispatch masks from the policy mask planes (the tail
+ * of _epoch_batch) */
+static void refresh_row(const Params *p, i64 b)
+{
+    const i64 n = p->n;
+    i8 *avail = p->avail + b * n;
+    i8 *iso = p->iso + b * n;
+    i8 *byp = p->byp + b * n;
+    const i8 *al = p->allowed_pl + b * n;
+    const i8 *is = p->isolated_pl + b * n;
+    const i8 *bp = p->bypass_pl + b * n;
+    const i8 *done = p->done + b * n;
+    for (i64 i = 0; i < n; i++) {
+        avail[i] = al[i] && !done[i];
+        iso[i] = is[i];
+        byp[i] = bp[i];
+    }
+}
+
+/* CCWS: score decay + lost-locality throttling (epoch.ccws_tick) */
+static void ccws_tick_row(const Params *p, i64 b)
+{
+    const i64 n = p->n;
+    i64 *s = p->score_ptrs[b] ? (i64 *)(uintptr_t)p->score_ptrs[b]
+                              : (i64 *)0;
+    if (!s)
+        return;
+    const i64 base = p->ccws_base[b], budget = p->ccws_budget[b];
+    const i8 *done = p->done + b * n;
+    i8 *al = p->allowed_pl + b * n;
+    for (i64 i = 0; i < n; i++) {
+        i64 d = s[i] / 8;
+        if (d < 1)
+            d = 1;
+        s[i] -= d;
+        if (s[i] < base)
+            s[i] = base;
+    }
+    /* stable sort: alive warps by descending score, dead warps last
+     * (keys match epoch.ccws_tick's -score / _DEAD_KEY argsort) */
+    i64 order[n];
+    for (i64 i = 0; i < n; i++)
+        order[i] = i;
+    for (i64 i = 1; i < n; i++) {
+        i64 o = order[i];
+        i64 key = done[o] ? HUGE_T : -s[o];
+        i64 j = i - 1;
+        while (j >= 0) {
+            i64 oj = order[j];
+            i64 kj = done[oj] ? HUGE_T : -s[oj];
+            if (kj <= key)
+                break;
+            order[j + 1] = oj;
+            j--;
+        }
+        order[j + 1] = o;
+    }
+    i64 csum = 0;
+    for (i64 r = 0; r < n; r++) {
+        i64 w = order[r];
+        i64 blocked = 0;
+        if (!done[w]) {
+            csum += s[w];
+            blocked = (csum > budget) && (r > 0);
+        }
+        al[w] = !blocked;
+    }
+}
+
+/* statPCAL: bandwidth-driven bypass flip (epoch.statpcal_tick); util
+ * is the single-rounding double of BatchedSMEngine._util_vec */
+static void statp_tick_row(const Params *p, i64 b, i64 cycle)
+{
+    const i64 n = p->n;
+    double util = 0.0;
+    if (cycle > 0) {
+        i64 den = p->dram_channels * cycle;
+        if (den < 1)
+            den = 1;
+        util = (double)(p->dram_requests[p->mem_of[b]] * p->dram_gap)
+            / (double)den;
+        if (util > 1.0)
+            util = 1.0;
+    }
+    int nb = util < p->sp_thresh[b];
+    if (nb == (int)p->sp_bypass[b])
+        return;
+    p->sp_bypass[b] = (i8)nb;
+    i8 *al = p->allowed_pl + b * n;
+    i8 *bp = p->bypass_pl + b * n;
+    const i8 *bm = p->sp_base + b * n;
+    for (i64 i = 0; i < n; i++) {
+        al[i] = nb ? 1 : bm[i];
+        bp[i] = nb ? !bm[i] : 0;
+    }
+}
+
+/* the pair-list trigger guard of Algorithm 1 lines 4-19: cumulative
+ * IRS of trigger k at or below the low cutoff (epoch.irs_cum_leq) */
+static int ciao_pop_ok(const Params *p, i64 b, i64 k, i64 act,
+                       const i8 *done)
+{
+    if (k == -1 || done[k])
+        return 1;
+    i64 inst = p->det_irs_inst[b];
+    if (inst <= 0 || act <= 0)
+        return 1;
+    const i64 *ih = (const i64 *)(uintptr_t)p->det_ptrs[b * 4 + 0];
+    i64 hits = ih[k % p->nw];
+    return (double)(hits * act) <= p->low_cutoff * (double)inst;
+}
+
+/* epoch-crossing poll + windowed IRS snapshots + aging
+ * (epoch.poll_epochs for one row) */
+static void ciao_poll_row(const Params *p, i64 b, i64 act,
+                          int *lowp, int *highp)
+{
+    const i64 nw = p->nw;
+    i64 it = p->det_inst_total[b];
+    const i64 *vh = (const i64 *)(uintptr_t)p->det_ptrs[b * 4 + 1];
+    i64 nlow = it / p->low_epoch;
+    *lowp = nlow != p->low_idx[b];
+    if (*lowp) {
+        p->low_idx[b] = nlow;
+        i64 win = it - p->low_base_inst[b];
+        if (win < 1)
+            win = 1;
+        for (i64 w = 0; w < nw; w++) {
+            i64 cur = vh[p->wid_sets[w]];
+            p->low_snap_hits[b * nw + w] =
+                cur - p->low_base_hits[b * nw + w];
+            p->low_base_hits[b * nw + w] = cur;
+        }
+        p->low_snap_win[b] = win;
+        p->low_snap_act[b] = act;
+        p->low_base_inst[b] = it;
+    }
+    i64 nhigh = it / p->high_epoch;
+    *highp = nhigh != p->high_idx[b];
+    if (*highp) {
+        p->high_idx[b] = nhigh;
+        i64 win = it - p->high_base_inst[b];
+        if (win < 1)
+            win = 1;
+        for (i64 w = 0; w < nw; w++) {
+            i64 cur = vh[p->wid_sets[w]];
+            p->high_snap_hits[b * nw + w] =
+                cur - p->high_base_hits[b * nw + w];
+            p->high_base_hits[b * nw + w] = cur;
+        }
+        p->high_snap_win[b] = win;
+        p->high_snap_act[b] = act;
+        p->high_base_inst[b] = it;
+        p->high_crossings[b] += 1;
+        if (p->aging_high && p->high_crossings[b] % p->aging_high == 0) {
+            p->det_irs_inst[b] /= 2;
+            i64 *ih = (i64 *)(uintptr_t)p->det_ptrs[b * 4 + 0];
+            for (i64 w = 0; w < nw; w++)
+                ih[w] /= 2;
+        }
+    }
+}
+
+/* Algorithm 1 lines 4-19: pop at most one stalled and one isolated
+ * warp, newest first (epoch.ciao_low_tick for one row) */
+static void ciao_low_row(const Params *p, i64 b, i64 act)
+{
+    const i64 n = p->n, le = p->list_entries;
+    const i8 *done = p->done + b * n;
+    i8 *al = p->allowed_pl + b * n;
+    i8 *is = p->isolated_pl + b * n;
+    i64 *pair = p->pair_list + b * le * 2;
+    i64 sl = p->stall_len[b];
+    if (sl > 0) {
+        i64 w = p->ciao_stall[b * n + sl - 1];
+        if (ciao_pop_ok(p, b, pair[(w % le) * 2 + 1], act, done)) {
+            p->stall_len[b] = sl - 1;
+            al[w] = 1;
+            pair[(w % le) * 2 + 1] = -1;
+        }
+    }
+    /* a warp stalled while isolated must reactivate first — `allowed`
+     * is read after the stall pop, like the scalar order */
+    i64 il = p->iso_len[b];
+    if (il > 0) {
+        i64 w = p->ciao_iso[b * n + il - 1];
+        if (al[w] &&
+                ciao_pop_ok(p, b, pair[(w % le) * 2 + 0], act, done)) {
+            p->iso_len[b] = il - 1;
+            is[w] = 0;
+            pair[(w % le) * 2 + 0] = -1;
+        }
+    }
+}
+
+/* Algorithm 1 lines 20-28: walk active warps by descending high-epoch
+ * IRS, take at most one isolate/stall action (epoch.ciao_high_tick) */
+static void ciao_high_row(const Params *p, i64 b)
+{
+    const i64 n = p->n, nw = p->nw, le = p->list_entries;
+    const i8 *done = p->done + b * n;
+    i8 *al = p->allowed_pl + b * n;
+    i8 *is = p->isolated_pl + b * n;
+    i64 *pair = p->pair_list + b * le * 2;
+    const i64 *interf = (const i64 *)(uintptr_t)p->det_ptrs[b * 4 + 2];
+    const i64 *hits = p->high_snap_hits + b * nw;
+    i64 scored[n];
+    i64 na = 0;
+    for (i64 i = 0; i < n; i++)
+        if (al[i] && !done[i])
+            scored[na++] = i;
+    if (na <= 1) /* never act on the last active warp */
+        return;
+    /* stable sort by descending snapshot hits (== descending IRS:
+     * within a row the snapshot is hits * (act/win), one positive
+     * scale), ties by warp id */
+    for (i64 i = 1; i < na; i++) {
+        i64 o = scored[i];
+        i64 key = -hits[o % nw];
+        i64 j = i - 1;
+        while (j >= 0 && -hits[scored[j] % nw] > key) {
+            scored[j + 1] = scored[j];
+            j--;
+        }
+        scored[j + 1] = o;
+    }
+    i64 act = p->high_snap_act[b], win = p->high_snap_win[b];
+    int mp = p->mode_p[b], mt = p->mode_t[b];
+    for (i64 r = 0; r < na; r++) {
+        i64 i = scored[r];
+        i64 h = hits[i % nw];
+        if (!((double)(h * act) > p->high_cutoff * (double)win))
+            break; /* sorted descending: nothing further exceeds */
+        i64 j = interf[i % le];
+        if (j == -1 || j == i || done[j])
+            continue;
+        if (mp && !is[j] && al[j]) {
+            is[j] = 1;
+            pair[(j % le) * 2 + 0] = i;
+            p->ciao_iso[b * n + p->iso_len[b]] = j;
+            p->iso_len[b] += 1;
+            return;
+        }
+        if (mt && al[j] && (is[j] || !mp)) {
+            al[j] = 0;
+            pair[(j % le) * 2 + 1] = i;
+            p->ciao_stall[b * n + p->stall_len[b]] = j;
+            p->stall_len[b] += 1;
+            return;
+        }
+    }
+}
+
+/* Service one epoch boundary in-stepper (the per-row equivalent of
+ * BatchedSMEngine._epoch_batch). Returns 0 when the row's policy is an
+ * unknown subclass (F_OBJECT) and must pause into Python instead.
+ * `anchor` advances the next-trigger table (epoch pauses do, throttle
+ * stretches do not, like the scalar loop). */
+static int service_epoch(const Params *p, i64 b, int anchor, i64 cycle,
+                         i64 li)
+{
+    i64 fam = p->fam[b];
+    if (fam == F_OBJECT)
+        return 0;
+    p->det_inst_total[b] = li;
+    p->det_irs_inst[b] = li - p->irs_off[b];
+    if (fam == F_CCWS) {
+        ccws_tick_row(p, b);
+    } else if (fam == F_STATP) {
+        statp_tick_row(p, b, cycle);
+    } else if (fam == F_CIAO) {
+        const i64 n = p->n;
+        const i8 *done = p->done + b * n;
+        const i8 *al = p->allowed_pl + b * n;
+        i64 act = 0;
+        for (i64 i = 0; i < n; i++)
+            act += al[i] && !done[i];
+        if (act < 1)
+            act = 1;
+        int low = 0, high = 0;
+        ciao_poll_row(p, b, act, &low, &high);
+        if (low)
+            ciao_low_row(p, b, act);
+        if (high)
+            ciao_high_row(p, b);
+    }
+    p->irs_off[b] = li - p->det_irs_inst[b]; /* aging moves it */
+    refresh_row(p, b);
+    if (anchor) {
+        i64 nxt = (li / p->low_epoch + 1) * p->low_epoch;
+        if (p->stride_ok && fam == F_CIAO
+                && p->stall_len[b] + p->iso_len[b] == 0)
+            nxt = (li / p->high_epoch + 1) * p->high_epoch;
+        p->next_epoch[b] = nxt;
+    }
+    return 1;
+}
+
+/* record one timeline sample (BatchedSMEngine._timeline_rows) */
+static void service_timeline(const Params *p, i64 b, i64 cycle, i64 instr)
+{
+    const i64 n = p->n;
+    const i8 *al = p->allowed_pl + b * n;
+    i64 na = 0;
+    for (i64 i = 0; i < n; i++)
+        na += al[i];
+    i64 k = p->tl_n[b];
+    if (k < p->tl_cap) { /* capacity-proved; guard against corruption */
+        i64 dc = cycle - p->tl_last_cycle[b];
+        if (dc < 1)
+            dc = 1;
+        p->tl_cycle[b * p->tl_cap + k] = cycle;
+        p->tl_dipc[b * p->tl_cap + k] =
+            (double)(instr - p->tl_last_instr[b]) / (double)dc;
+        p->tl_act[b * p->tl_cap + k] = na;
+        p->tl_n[b] = k + 1;
+    }
+    p->tl_last_instr[b] = instr;
+    p->tl_last_cycle[b] = cycle;
+    p->window_mark[b] += p->timeline_every;
+}
+
+/* warp retirement for the known kinds (BatchedSMEngine._warp_done_rows:
+ * Best-SWL / statPCAL released-set rotation); the caller has already
+ * flipped done/avail and handles WD_OBJECT by pausing */
+static void warp_done_row(const Params *p, i64 b, i64 wid)
+{
+    const i64 n = p->n;
+    i64 kind = p->wd_kind[b];
+    p->remaining[b] -= 1;
+    if (kind == WD_SWL) {
+        i8 *al = p->allowed_pl + b * n;
+        if (al[wid]) {
+            al[wid] = 0;
+            i64 nx = p->swl_next[b];
+            if (nx < n) {
+                al[nx] = 1;
+                p->swl_next[b] = nx + 1;
+                p->avail[b * n + nx] = !p->done[b * n + nx];
+            }
+        }
+    } else if (kind == WD_STATP) {
+        i8 *bm = p->sp_base + b * n;
+        if (bm[wid]) {
+            bm[wid] = 0;
+            i64 nx = p->swl_next[b];
+            if (nx < n) {
+                bm[nx] = 1;
+                p->swl_next[b] = nx + 1;
+            }
+            i8 *al = p->allowed_pl + b * n;
+            i8 *bp = p->bypass_pl + b * n;
+            i8 *avail = p->avail + b * n;
+            i8 *byp = p->byp + b * n;
+            const i8 *done = p->done + b * n;
+            int ba = p->sp_bypass[b];
+            for (i64 i = 0; i < n; i++) {
+                al[i] = ba || bm[i];
+                bp[i] = ba ? !bm[i] : 0;
+                avail[i] = al[i] && !done[i];
+                byp[i] = bp[i];
+            }
+        }
+    }
+}
+
 static void run_cell(const Params *p, i64 b)
 {
     const i64 n = p->n, L = p->L, P = p->P;
@@ -216,8 +615,18 @@ static void run_cell(const Params *p, i64 b)
                         w2 = i;
                     }
                 if (w2 < 0) { /* everything throttled */
-                    flags = P_THROTTLE;
-                    break;
+                    if (p->fam[b] == F_OBJECT) {
+                        flags = P_THROTTLE;
+                        break;
+                    }
+                    /* advance to let epochs fire, service in-stepper
+                     * (no re-anchor of next_epoch, like the scalar
+                     * loop), then retry selection; the slice check
+                     * above bounds the stretch */
+                    cycle += p->low_epoch;
+                    li += p->low_epoch;
+                    service_epoch(p, b, 0, cycle, li);
+                    continue;
                 }
                 if (best >= until) {
                     /* clamp to the slice boundary, like the scalar
@@ -371,18 +780,36 @@ static void run_cell(const Params *p, i64 b)
         i64 pn = ++op_idx[wid];
         instr += adv;
         flags = 0;
+        int fin = 0;
         if (pn >= n_ops[wid]) {
             done[wid] = 1;
             avail[wid] = 0;
             if (last_wid == wid)
                 last_wid = -1;
             p->last_done_wid[b] = wid;
-            flags |= P_WARPDONE;
+            if (p->wd_kind[b] == WD_OBJECT) {
+                flags |= P_WARPDONE;
+            } else {
+                warp_done_row(p, b, wid);
+                if (p->remaining[b] == 0)
+                    fin = 1; /* finalize after epoch/timeline below */
+            }
         }
-        if (li >= p->next_epoch[b])
-            flags |= P_EPOCH;
-        if (instr >= p->window_mark[b])
-            flags |= P_TIMELINE;
+        /* once any pause pends for Python, later checks on this
+         * dispatch must pause too — the drain replays them in the
+         * scalar order (warp-done, epoch, timeline) */
+        if (li >= p->next_epoch[b]) {
+            if (flags || !service_epoch(p, b, 1, cycle, li))
+                flags |= P_EPOCH;
+        }
+        if (instr >= p->window_mark[b]) {
+            if (flags)
+                flags |= P_TIMELINE;
+            else
+                service_timeline(p, b, cycle, instr);
+        }
+        if (fin)
+            flags |= P_FINALIZE;
         if (flags)
             break;
     }

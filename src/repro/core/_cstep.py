@@ -24,9 +24,11 @@ import tempfile
 from typing import Optional
 
 _c_i64 = ctypes.c_longlong
+_c_f64 = ctypes.c_double
 _p_i64 = ctypes.POINTER(ctypes.c_longlong)
 _p_i8 = ctypes.POINTER(ctypes.c_byte)
 _p_u64 = ctypes.POINTER(ctypes.c_uint64)
+_p_f64 = ctypes.POINTER(ctypes.c_double)
 
 
 class Params(ctypes.Structure):
@@ -76,6 +78,34 @@ class Params(ctypes.Structure):
         # detector hooks
         ("det_ptrs", _p_u64), ("score_ptrs", _p_u64),
         ("score_bump", _p_i64), ("pair_dense", _p_i64),
+        # in-stepper epoch / warp-done / timeline servicing
+        ("high_epoch", _c_i64), ("aging_high", _c_i64),
+        ("stride_ok", _c_i64), ("timeline_every", _c_i64),
+        ("tl_cap", _c_i64),
+        ("low_cutoff", _c_f64), ("high_cutoff", _c_f64),
+        ("fam", _p_i8), ("mode_p", _p_i8), ("mode_t", _p_i8),
+        ("allowed_pl", _p_i8), ("isolated_pl", _p_i8),
+        ("bypass_pl", _p_i8),
+        ("sp_bypass", _p_i8), ("sp_base", _p_i8),
+        ("sp_thresh", _p_f64),
+        ("det_inst_total", _p_i64), ("det_irs_inst", _p_i64),
+        ("irs_off", _p_i64),
+        ("low_idx", _p_i64), ("high_idx", _p_i64),
+        ("low_base_inst", _p_i64), ("high_base_inst", _p_i64),
+        ("high_crossings", _p_i64),
+        ("low_base_hits", _p_i64), ("high_base_hits", _p_i64),
+        ("low_snap_hits", _p_i64), ("high_snap_hits", _p_i64),
+        ("low_snap_win", _p_i64), ("high_snap_win", _p_i64),
+        ("low_snap_act", _p_i64), ("high_snap_act", _p_i64),
+        ("pair_list", _p_i64), ("wid_sets", _p_i64),
+        ("ccws_base", _p_i64), ("ccws_budget", _p_i64),
+        ("ciao_stall", _p_i64), ("ciao_iso", _p_i64),
+        ("stall_len", _p_i64), ("iso_len", _p_i64),
+        ("wd_kind", _p_i64), ("swl_next", _p_i64),
+        ("remaining", _p_i64),
+        ("tl_cycle", _p_i64), ("tl_act", _p_i64), ("tl_n", _p_i64),
+        ("tl_last_instr", _p_i64), ("tl_last_cycle", _p_i64),
+        ("tl_dipc", _p_f64),
     ]
 
 
@@ -111,9 +141,12 @@ def _load() -> None:
             fd, tmp = tempfile.mkstemp(suffix=".so", dir=str(cache_dir))
             os.close(fd)
             try:
+                # -ffp-contract=off: the fixed-point decision compares
+                # must perform exactly one rounding per side (no FMA),
+                # bit-matching numpy/XLA (gcc defaults to =fast at -O2)
                 subprocess.run(
-                    [cc, "-O2", "-shared", "-fPIC", "-o", tmp,
-                     str(src_path)],
+                    [cc, "-O2", "-ffp-contract=off", "-shared", "-fPIC",
+                     "-o", tmp, str(src_path)],
                     check=True, capture_output=True)
                 os.replace(tmp, so)  # atomic: concurrent builders race-safe
             finally:
@@ -143,6 +176,10 @@ def _i64(a):
 
 def _i8(a):
     return a.ctypes.data_as(_p_i8)
+
+
+def _f64(a):
+    return a.ctypes.data_as(_p_f64)
 
 
 def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
@@ -205,6 +242,51 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
     p.score_ptrs = score_ptrs.ctypes.data_as(_p_u64)
     p.score_bump = _i64(bumps)
     p.pair_dense = _i64(eng.pair_dense)
+    # in-stepper epoch / warp-done / timeline servicing
+    dcfg = cfg.detector
+    p.high_epoch = eng.high_epoch
+    p.aging_high = dcfg.aging_high_epochs
+    p.stride_ok = int(eng._stride_ok)
+    p.timeline_every = eng.timeline_every
+    p.tl_cap = eng.tl_cap
+    p.low_cutoff = dcfg.low_cutoff
+    p.high_cutoff = dcfg.high_cutoff
+    p.fam = _i8(eng.fam)
+    p.mode_p, p.mode_t = _i8(eng.mode_p), _i8(eng.mode_t)
+    p.allowed_pl = _i8(eng.allowed_pl)
+    p.isolated_pl = _i8(eng.isolated_pl)
+    p.bypass_pl = _i8(eng.bypass_pl)
+    p.sp_bypass, p.sp_base = _i8(eng.sp_bypass), _i8(eng.sp_base)
+    p.sp_thresh = _f64(eng.sp_thresh)
+    pl = eng.det_pl
+    p.det_inst_total = _i64(pl.inst_total)
+    p.det_irs_inst = _i64(pl.irs_inst)
+    p.irs_off = _i64(eng.irs_off)
+    p.low_idx, p.high_idx = _i64(pl.low_idx), _i64(pl.high_idx)
+    p.low_base_inst = _i64(pl.low_base_inst)
+    p.high_base_inst = _i64(pl.high_base_inst)
+    p.high_crossings = _i64(pl.high_crossings)
+    p.low_base_hits = _i64(pl.low_base_hits)
+    p.high_base_hits = _i64(pl.high_base_hits)
+    p.low_snap_hits = _i64(pl.low_snap_hits)
+    p.high_snap_hits = _i64(pl.high_snap_hits)
+    p.low_snap_win = _i64(pl.low_snap_win)
+    p.high_snap_win = _i64(pl.high_snap_win)
+    p.low_snap_act = _i64(pl.low_snap_act)
+    p.high_snap_act = _i64(pl.high_snap_act)
+    p.pair_list = _i64(pl.pair_list)
+    p.wid_sets = _i64(pl.wid_sets)
+    p.ccws_base = _i64(eng.ccws_base)
+    p.ccws_budget = _i64(eng.ccws_budget)
+    p.ciao_stall, p.ciao_iso = _i64(eng.ciao_stall), _i64(eng.ciao_iso)
+    p.stall_len, p.iso_len = _i64(eng.stall_len), _i64(eng.iso_len)
+    p.wd_kind, p.swl_next = _i64(eng.wd_kind), _i64(eng.swl_next)
+    p.remaining = _i64(eng.remaining)
+    p.tl_cycle, p.tl_act = _i64(eng.tl_cycle), _i64(eng.tl_act)
+    p.tl_n = _i64(eng.tl_n)
+    p.tl_last_instr = _i64(eng.last_instr)
+    p.tl_last_cycle = _i64(eng.last_cycle)
+    p.tl_dipc = _f64(eng.tl_dipc)
     p._keep = (det_ptrs, score_ptrs, bumps, eng)
     return p
 

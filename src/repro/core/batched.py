@@ -74,8 +74,8 @@ from repro.core import epoch as _epoch
 from repro.core.gpu import GPUConfig, GPUResult, sm_subworkloads
 from repro.core.interference import InterferenceDetector
 from repro.core.onchip import LINE, SMMT
-from repro.core.policies import (BasePolicy, CCWSPolicy, CIAOPolicy,
-                                 StatPCALPolicy, make_policy)
+from repro.core.policies import (BasePolicy, BestSWLPolicy, CCWSPolicy,
+                                 CIAOPolicy, StatPCALPolicy, make_policy)
 from repro.core.simulator import SimConfig, SimResult, _HUGE
 from repro.workloads import tokens as _tokens
 
@@ -89,12 +89,20 @@ P_THROTTLE = 8
 P_CAP = 16          # legacy alias: a slice stop at the cycle cap
 P_SLICE = 32
 
+P_FINALIZE = 64     # C stepper: row completed, Python only finalizes
+
 # policy families for the vectorized epoch dispatch
 F_PASSIVE = 0       # no-op epoch_tick (GTO, Best-SWL): never pauses
 F_CCWS = 1
 F_STATP = 2
 F_CIAO = 3
 F_OBJECT = 4        # unknown subclass: per-cell object fallback
+
+# warp-done families for the vectorized retirement dispatch
+WD_NOOP = 0         # BasePolicy.on_warp_done (GTO, CCWS, CIAO)
+WD_SWL = 1          # Best-SWL rotation: allowed_pl row IS the set
+WD_STATP = 2        # statPCAL rotation on the base set + mode rebuild
+WD_OBJECT = 3       # unknown subclass: per-cell object fallback
 
 
 def supports_config(cfg: SimConfig, gpu: Optional[GPUConfig] = None) -> bool:
@@ -141,7 +149,7 @@ class BatchedSMEngine:
             raise ValueError(
                 "config not supported by the batched engine "
                 "(l2_bank_gap != 0 or mshr_gate); use SMSimulator")
-        if backend not in ("auto", "numpy", "c"):
+        if backend not in ("auto", "numpy", "c", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         self._backend_req = backend
         self.cells = list(cells)
@@ -254,6 +262,12 @@ class BatchedSMEngine:
             streams_per_row, n)
         self.L = self.toks.shape[2]
         self.n_ops = n_ops_u[self.u_of]            # (B, n) per-row copy
+        # exact per-row instruction total (ALU tokens retire |tok|, mem
+        # tokens 1): bounds the timeline sample count, so the sample
+        # arrays can be preallocated once and shared with the C stepper
+        tot_u = np.asarray([sum((-t if t < 0 else 1) for w in s for t in w)
+                            for s in streams_per_row], i64)
+        self.total_instr = tot_u[self.u_of]
 
         nrb = max(int(self.region_blocks.max()), 1)
 
@@ -333,10 +347,30 @@ class BatchedSMEngine:
         self.fam = np.zeros(B, np.int8)
         self.mode_p = np.zeros(B, b8)
         self.mode_t = np.zeros(B, b8)
+        self.wd_kind = np.zeros(B, np.int64)
+        self.swl_next = np.zeros(B, i64)
         for b, pol in enumerate(self.policies):
             self.dets[b].adopt_row(self.det_pl, b)
             pol.adopt_mask_rows(self.allowed_pl[b], self.isolated_pl[b],
                                 self.bypass_pl[b])
+            ow = type(pol).on_warp_done
+            if ow is BasePolicy.on_warp_done:
+                self.wd_kind[b] = WD_NOOP
+            elif isinstance(pol, StatPCALPolicy) \
+                    and ow is BestSWLPolicy.on_warp_done \
+                    and type(pol)._rebuild_masks \
+                    is StatPCALPolicy._rebuild_masks:
+                self.wd_kind[b] = WD_STATP
+            elif isinstance(pol, BestSWLPolicy) \
+                    and not isinstance(pol, StatPCALPolicy) \
+                    and ow is BestSWLPolicy.on_warp_done \
+                    and type(pol)._rebuild_masks \
+                    is BestSWLPolicy._rebuild_masks:
+                self.wd_kind[b] = WD_SWL
+            else:
+                self.wd_kind[b] = WD_OBJECT
+            if isinstance(pol, BestSWLPolicy):
+                self.swl_next[b] = pol._next
             if type(pol).epoch_tick is BasePolicy.epoch_tick:
                 self.fam[b] = F_PASSIVE
             elif isinstance(pol, CCWSPolicy):
@@ -359,6 +393,9 @@ class BatchedSMEngine:
                 self.mode_t[b] = pol.mode in ("t", "c")
             else:           # custom subclass: per-cell object fallback
                 self.fam[b] = F_OBJECT
+        # a custom epoch_tick may read policy state the vectorized
+        # retirement would leave stale — keep those rows fully on objects
+        self.wd_kind[self.fam == F_OBJECT] = WD_OBJECT
 
         # next-trigger table: passive cells never pause for epochs; CIAO
         # cells with empty stacks skip straight to the high boundary
@@ -409,9 +446,7 @@ class BatchedSMEngine:
         self._row_ch = self.mem_of * self.dram_channels
         self._tok_base = self.u_of * (n * self.L)
 
-        self.timelines: List[List[Tuple[int, float, int]]] = \
-            [[] for _ in range(B)]
-        self.active_samples: List[List[int]] = [[] for _ in range(B)]
+        self._alloc_timelines()
         self.results: List[Optional[SimResult]] = [None] * B
         # pair counts: the numpy stepper updates det.pair_counts directly
         # (VTA hits are rare); the C stepper fills a dense (n+1, n) plane
@@ -425,6 +460,22 @@ class BatchedSMEngine:
             self._refresh_masks(b)
             if self.remaining[b] == 0:
                 self._finalize(b)
+
+    def _alloc_timelines(self) -> None:
+        """Preallocate the stacked timeline-sample arrays. Capacity is
+        exact: a sample fires when ``instr >= window_mark`` and advances
+        the mark by ``timeline_every``, and ``instr`` never exceeds the
+        row's token-stream total, so a row records at most
+        ``total_instr // timeline_every + 1`` samples. The C stepper
+        records into these arrays through raw pointers, so they must
+        never be reallocated once a run has bound them."""
+        K = int((self.total_instr // max(self.timeline_every, 1)).max()) \
+            + 2
+        self.tl_cap = K
+        self.tl_cycle = np.zeros((self.B, K), np.int64)
+        self.tl_dipc = np.zeros((self.B, K), np.float64)
+        self.tl_act = np.zeros((self.B, K), np.int64)
+        self.tl_n = np.zeros(self.B, np.int64)
 
     # --------------------------------------------------- shared handlers
     # Everything below mirrors, per row, what SMSimulator.advance does
@@ -500,15 +551,15 @@ class BatchedSMEngine:
                                      self.ciao_iso, self.iso_len,
                                      self.allowed_pl, self.isolated_pl,
                                      self.done, n_act[low], lo)
-            for j in np.flatnonzero(high):
-                b = int(g[j])
+            hi = g[high]
+            if hi.size:
                 # alive after the low tick, like the scalar order
-                alive = self.allowed_pl[b] & ~self.done[b]
-                _epoch.ciao_high_tick_cell(
-                    pl, b, self.ciao_stall, self.stall_len,
+                _epoch.ciao_high_tick(
+                    pl, self.ciao_stall, self.stall_len,
                     self.ciao_iso, self.iso_len, self.allowed_pl,
-                    self.isolated_pl, self.done, alive,
-                    bool(self.mode_p[b]), bool(self.mode_t[b]))
+                    self.isolated_pl, self.done,
+                    self.allowed_pl[hi] & ~self.done[hi],
+                    self.mode_p[hi], self.mode_t[hi], hi)
         sel = fam == F_OBJECT
         if sel.any():
             for b in idx[sel]:
@@ -540,26 +591,61 @@ class BatchedSMEngine:
                        self._util(b))
         self._maybe_refresh(b)
 
-    def _handle_warp_done(self, b: int, wid: int) -> None:
-        # NOTE: does not finalize — the scalar loop still runs the epoch
-        # and timeline checks on the dispatch that retires the last warp,
-        # so the caller finalizes after those handlers.
-        self.remaining[b] -= 1
-        self.policies[b].on_warp_done(wid)
-        self._maybe_refresh(b)
+    def _warp_done_rows(self, rows: np.ndarray, wids: np.ndarray) -> None:
+        """Vectorized warp retirement (the former per-cell
+        ``policy.on_warp_done`` replay). Does not finalize — the scalar
+        loop still runs the epoch and timeline checks on the dispatch
+        that retires the last warp, so callers finalize after those.
 
-    def _handle_timeline(self, b: int) -> None:
-        act = self.policies[b].num_allowed()
-        self.active_samples[b].append(act)
-        dc = int(self.cycle[b]) - int(self.last_cycle[b])
-        if dc < 1:
-            dc = 1
-        self.timelines[b].append(
-            (int(self.cycle[b]),
-             (int(self.instr[b]) - int(self.last_instr[b])) / dc, act))
-        self.last_instr[b] = self.instr[b]
-        self.last_cycle[b] = self.cycle[b]
-        self.window_mark[b] += self.timeline_every
+        Best-SWL's released-set rotation runs as batch scatters: the
+        ``allowed_pl`` row *is* the allowed set (``sp_base`` for
+        statPCAL, whose mode rebuild is reapplied from the flag planes).
+        Unknown subclasses replay through the object."""
+        kind = self.wd_kind[rows]
+        self.remaining[rows[kind < WD_OBJECT]] -= 1
+        for k, mask_pl in ((WD_SWL, self.allowed_pl),
+                           (WD_STATP, self.sp_base)):
+            km = kind == k
+            if not km.any():
+                continue
+            r, w = rows[km], wids[km]
+            in_set = mask_pl[r, w]
+            rr, ww = r[in_set], w[in_set]
+            if not rr.size:
+                continue
+            mask_pl[rr, ww] = False
+            nx = self.swl_next[rr]
+            can = nx < self.n_warps
+            mask_pl[rr[can], nx[can]] = True
+            self.swl_next[rr[can]] += 1
+            if k == WD_STATP:
+                byp = self.sp_bypass[rr][:, None]
+                bm = self.sp_base[rr]
+                self.allowed_pl[rr] = byp | bm
+                self.bypass_pl[rr] = np.where(byp, ~bm, False)
+            self.avail[rr] = self.allowed_pl[rr] & ~self.done[rr]
+            self.byp[rr] = self.bypass_pl[rr]
+        obj = kind == WD_OBJECT
+        for b, w in zip(rows[obj], wids[obj]):
+            b = int(b)
+            self.remaining[b] -= 1
+            self.policies[b].on_warp_done(int(w))
+            self._maybe_refresh(b)
+
+    def _timeline_rows(self, rows: np.ndarray) -> None:
+        """Vectorized timeline sampling into the stacked arrays (the
+        former per-cell list appends)."""
+        act = np.count_nonzero(self.allowed_pl[rows], axis=1)
+        k = self.tl_n[rows]
+        cyc, ins = self.cycle[rows], self.instr[rows]
+        dc = np.maximum(cyc - self.last_cycle[rows], 1)
+        self.tl_cycle[rows, k] = cyc
+        self.tl_dipc[rows, k] = (ins - self.last_instr[rows]) / dc
+        self.tl_act[rows, k] = act
+        self.tl_n[rows] = k + 1
+        self.last_instr[rows] = ins
+        self.last_cycle[rows] = cyc
+        self.window_mark[rows] += self.timeline_every
 
     def _slice_stop(self, rows: np.ndarray) -> None:
         """Rows that reached their slice boundary stop for this phase;
@@ -652,7 +738,11 @@ class BatchedSMEngine:
         h = stats["l1_hit"] + stats["smem_hit"]
         tot = h + stats["l1_miss"] + stats["smem_miss"] \
             + stats["smem_migrate"]
-        samples = self.active_samples[b]
+        k = int(self.tl_n[b])
+        timeline = [(int(c), float(d), int(a))
+                    for c, d, a in zip(self.tl_cycle[b, :k],
+                                       self.tl_dipc[b, :k],
+                                       self.tl_act[b, :k])]
         self.results[b] = SimResult(
             policy=self.policies[b].name,
             cycles=cycle,
@@ -660,10 +750,10 @@ class BatchedSMEngine:
             ipc=instr / max(cycle, 1),
             l1_hit_rate=h / tot if tot else 0.0,
             vta_hits=int(self.vta_hit_events[b]),
-            mean_active_warps=(float(np.mean(samples)) if samples
+            mean_active_warps=(float(np.mean(self.tl_act[b, :k])) if k
                                else float(self.n_of[b])),
             stats=stats,
-            timeline=list(self.timelines[b]),
+            timeline=timeline,
             pairs=pairs,
         )
 
@@ -675,6 +765,7 @@ class BatchedSMEngine:
         if timeline_every != self.timeline_every:
             self.timeline_every = timeline_every
             self.window_mark[:] = timeline_every
+            self._alloc_timelines()    # before any stepper binds pointers
         backend = self._backend_req
         if backend == "auto":
             from repro.core import _cstep
@@ -685,6 +776,9 @@ class BatchedSMEngine:
                 raise RuntimeError(
                     f"C stepper unavailable: {_cstep.unavailable_reason()}")
             self._run_sliced(self._make_c_round(_cstep))
+        elif backend == "jax":
+            from repro.core import jax_backend
+            jax_backend.run_engine(self)
         else:
             self._run_sliced(self._np_round)
         self.backend = backend
@@ -769,9 +863,9 @@ class BatchedSMEngine:
             self.cycle[thr] += self.low_epoch
             self.li[thr] += self.low_epoch
         wd = idx[(flags & P_WARPDONE) != 0]
-        for b in wd:
+        if wd.size:
             # the stepper already flipped done/avail/last_wid
-            self._handle_warp_done(int(b), int(self.last_done_wid[b]))
+            self._warp_done_rows(wd, self.last_done_wid[wd])
         ep = idx[(flags & P_EPOCH) != 0]
         if ep.size or thr.size:
             allb = np.concatenate([ep, thr])
@@ -779,11 +873,13 @@ class BatchedSMEngine:
             anchor[:len(ep)] = True
             self._epoch_batch(allb, anchor)
         tl = idx[(flags & P_TIMELINE) != 0]
-        for b in tl:
-            self._handle_timeline(int(b))
-        for b in wd:
-            if self.remaining[b] == 0:
-                self._finalize(int(b))
+        if tl.size:
+            self._timeline_rows(tl)
+        for b in wd[self.remaining[wd] == 0]:
+            self._finalize(int(b))
+        # rows the C stepper retired entirely in-stepper
+        for b in idx[(flags & P_FINALIZE) != 0]:
+            self._finalize(int(b))
 
     # ------------------------------------------------- numpy lockstep
     def _np_round(self) -> None:
@@ -891,8 +987,8 @@ class BatchedSMEngine:
             done_f[rw] = done_f[rw] | fin
             avail_f[rw] = avail_f[rw] & ~fin
             np.copyto(self.last_wid, -1, where=fin)
-            for b in np.flatnonzero(fin):
-                self._handle_warp_done(b, int(widc[b]))
+            fi = np.flatnonzero(fin)
+            self._warp_done_rows(fi, widc[fi])
         ep = disp & (self.li >= self.next_epoch)
         if ep.any():
             ei = np.flatnonzero(ep)
@@ -901,12 +997,10 @@ class BatchedSMEngine:
             self.perf["drain_s"] += time.perf_counter() - t0
         tl = disp & (self.instr >= self.window_mark)
         if tl.any():
-            for b in np.flatnonzero(tl):
-                self._handle_timeline(b)
+            self._timeline_rows(np.flatnonzero(tl))
         if fin.any():
-            for b in np.flatnonzero(fin):
-                if self.remaining[b] == 0:
-                    self._finalize(b)
+            for b in fi[self.remaining[fi] == 0]:
+                self._finalize(int(b))
 
     def _np_mem_chain(self, mem, tok, widc, rw, cycle, new_ready):
         """The fused per-access chain, vectorized over the batch axis.

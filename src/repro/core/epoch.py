@@ -15,10 +15,9 @@ planes with a leading batch axis:
 * :func:`statpcal_tick` — the statPCAL bandwidth-driven bypass flip.
 * :func:`ciao_low_tick` — Algorithm 1 lines 4-19 (reverse-order
   reactivation, one pop per stack per epoch) across cells.
-* :func:`ciao_high_tick_cell` — Algorithm 1 lines 20-28 (one
-  isolate/stall action per high epoch). High epochs are 20x rarer than
-  low epochs, so the action-selection walk stays a per-cell loop over
-  the same planes; only the IRS scoring sort is vectorized.
+* :func:`ciao_high_tick` — Algorithm 1 lines 20-28 (one isolate/stall
+  action per high epoch) across cells: candidate scoring, the stable
+  descending-IRS walk and the single action are all batched scatters.
 
 The **scalar objects are batch-of-1 views**: ``InterferenceDetector``
 keeps its state in a single-row :class:`DetPlanes` and
@@ -33,11 +32,17 @@ That makes the vectorized forms the single implementation the scalar
 ``tests/test_epoch.py`` property-tests batch == per-cell on random
 counter states.
 
-Bit-exactness notes: every arithmetic step mirrors the former scalar
-code elementwise — int64 floor divisions, float64 true divisions (the
-operands stay far below 2**53, so NumPy's int64->float64 conversion is
-exact), and stable sorts wherever the scalar code relied on Python's
-stable ``sorted``/``argsort``.
+Bit-exactness notes: every arithmetic step mirrors the scalar semantics
+elementwise — int64 floor divisions and stable sorts wherever the scalar
+code relied on Python's stable ``sorted``/``argsort``. The IRS state is
+**fixed-point**: snapshots are stored as the integer triple
+``(hits, window, active)`` and every cutoff decision is the
+single-rounding float64 compare ``hits*active <> cutoff*window``. All
+integer operands stay far below 2**53, so the int64->float64
+conversions are exact, the compare performs exactly one IEEE rounding
+per side, and the decision is bit-deterministic across numpy, the C
+stepper, and XLA — no accumulated float state ever crosses an epoch
+boundary.
 """
 from __future__ import annotations
 
@@ -76,8 +81,13 @@ class DetPlanes:
     irs_hits: np.ndarray             # (B, nw) i64  aged per-warp VTA hits
     low_base_hits: np.ndarray        # (B, nw) i64
     high_base_hits: np.ndarray       # (B, nw) i64
-    irs_low_snap: np.ndarray         # (B, nw) f64  windowed IRS snapshots
-    irs_high_snap: np.ndarray        # (B, nw) f64
+    # fixed-point windowed IRS snapshots: value = hits * act / win
+    low_snap_hits: np.ndarray        # (B, nw) i64  hits in the window
+    high_snap_hits: np.ndarray       # (B, nw) i64
+    low_snap_win: np.ndarray         # (B,) i64  window length (>= 1)
+    high_snap_win: np.ndarray        # (B,) i64
+    low_snap_act: np.ndarray         # (B,) i64  active warps (>= 1)
+    high_snap_act: np.ndarray        # (B,) i64
     vta_hits: np.ndarray             # (B, v_sets) i64 (aliases vta.hits)
     interfering: np.ndarray          # (B, list_entries) i64
     sat: np.ndarray                  # (B, list_entries) i64
@@ -86,7 +96,7 @@ class DetPlanes:
 
     @classmethod
     def alloc(cls, b: int, cfg) -> "DetPlanes":
-        i64, f64 = np.int64, np.float64
+        i64 = np.int64
         nw, le = cfg.num_warps, cfg.list_entries
         return cls(
             cfg=cfg,
@@ -100,8 +110,12 @@ class DetPlanes:
             irs_hits=np.zeros((b, nw), i64),
             low_base_hits=np.zeros((b, nw), i64),
             high_base_hits=np.zeros((b, nw), i64),
-            irs_low_snap=np.zeros((b, nw), f64),
-            irs_high_snap=np.zeros((b, nw), f64),
+            low_snap_hits=np.zeros((b, nw), i64),
+            high_snap_hits=np.zeros((b, nw), i64),
+            low_snap_win=np.ones(b, i64),
+            high_snap_win=np.ones(b, i64),
+            low_snap_act=np.ones(b, i64),
+            high_snap_act=np.ones(b, i64),
             vta_hits=np.zeros((b, cfg.vta_sets), i64),
             interfering=np.full((b, le), NO_WARP, i64),
             sat=np.zeros((b, le), i64),
@@ -112,8 +126,9 @@ class DetPlanes:
     _ROW_FIELDS = ("inst_total", "irs_inst", "low_idx", "high_idx",
                    "low_base_inst", "high_base_inst", "high_crossings",
                    "irs_hits", "low_base_hits", "high_base_hits",
-                   "irs_low_snap", "irs_high_snap", "vta_hits",
-                   "interfering", "sat", "pair_list")
+                   "low_snap_hits", "high_snap_hits", "low_snap_win",
+                   "high_snap_win", "low_snap_act", "high_snap_act",
+                   "vta_hits", "interfering", "sat", "pair_list")
 
     def row(self, b: int) -> "DetPlanes":
         """A batch-of-1 *view* of row ``b`` (shares memory)."""
@@ -147,10 +162,10 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
         sub = idx[low]
         pl.low_idx[sub] = nlow[low]
         window = np.maximum(it[low] - pl.low_base_inst[sub], 1)
-        per_warp = window / act[low]
         cur = pl.vta_hits[sub][:, pl.wid_sets]
-        pl.irs_low_snap[sub] = (cur - pl.low_base_hits[sub]) \
-            / per_warp[:, None]
+        pl.low_snap_hits[sub] = cur - pl.low_base_hits[sub]
+        pl.low_snap_win[sub] = window
+        pl.low_snap_act[sub] = act[low]
         pl.low_base_hits[sub] = cur
         pl.low_base_inst[sub] = it[low]
     nhigh = it // cfg.high_epoch
@@ -159,10 +174,10 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
         sub = idx[high]
         pl.high_idx[sub] = nhigh[high]
         window = np.maximum(it[high] - pl.high_base_inst[sub], 1)
-        per_warp = window / act[high]
         cur = pl.vta_hits[sub][:, pl.wid_sets]
-        pl.irs_high_snap[sub] = (cur - pl.high_base_hits[sub]) \
-            / per_warp[:, None]
+        pl.high_snap_hits[sub] = cur - pl.high_base_hits[sub]
+        pl.high_snap_win[sub] = window
+        pl.high_snap_act[sub] = act[high]
         pl.high_base_hits[sub] = cur
         pl.high_base_inst[sub] = it[high]
         pl.high_crossings[sub] += 1
@@ -178,15 +193,36 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
 def irs_cumulative(pl: DetPlanes, idx: np.ndarray, wid: np.ndarray,
                    active: np.ndarray) -> np.ndarray:
     """Eq. 1 over the aged cumulative counters, vectorized:
-    ``irs_hits[wid] / (irs_inst / active)`` with the scalar guards
-    (zero denominator -> 0.0)."""
+    ``irs_hits[wid] * active / irs_inst`` with the scalar guards
+    (zero denominator -> 0.0). Reporting only — cutoff *decisions* go
+    through :func:`irs_cum_leq` so they stay single-rounding."""
     inst = pl.irs_inst[idx]
     act = np.asarray(active, np.int64)
     ok = (inst > 0) & (act > 0)
-    per_warp = inst / np.where(act > 0, act, 1)
     hits = pl.irs_hits[idx, wid % pl.cfg.num_warps]
-    return np.where(ok & (per_warp > 0),
-                    hits / np.where(per_warp > 0, per_warp, 1.0), 0.0)
+    return np.where(ok, (hits * act) / np.where(inst > 0, inst, 1), 0.0)
+
+
+def irs_cum_leq(pl: DetPlanes, idx: np.ndarray, wid: np.ndarray,
+                active: np.ndarray, cutoff: float) -> np.ndarray:
+    """Cutoff decision on the cumulative IRS: True where
+    ``irs_hits[wid] / (irs_inst / active) <= cutoff`` (or the guards
+    degrade the IRS to 0.0, which any cutoff >= 0 admits). Evaluated as
+    the single-rounding compare ``hits*act <= cutoff*inst`` — the
+    fixed-point decision contract shared by numpy, C, and XLA."""
+    inst = pl.irs_inst[idx]
+    act = np.asarray(active, np.int64)
+    hits = pl.irs_hits[idx, wid % pl.cfg.num_warps]
+    bad = (inst <= 0) | (act <= 0)
+    return bad | ((hits * act) <= cutoff * inst.astype(np.float64))
+
+
+def snap_over(hits: np.ndarray, win: np.ndarray, act: np.ndarray,
+              cutoff: float) -> np.ndarray:
+    """Windowed-snapshot cutoff decision: True where the fixed-point
+    snapshot ``hits / (win / act)`` exceeds ``cutoff``, evaluated as the
+    single-rounding compare ``hits*act > cutoff*win``."""
+    return (hits * act) > cutoff * np.asarray(win, np.float64)
 
 
 # ----------------------------------------------------------------- CCWS
@@ -270,7 +306,7 @@ def ciao_low_tick(pl: DetPlanes, stall: np.ndarray, stall_len: np.ndarray,
     k = pl.pair_list[idx, topc % le, 1]
     kc = np.where(k >= 0, k, 0)
     pop = has & ((k == NO_WARP) | fin[idx, kc]
-                 | (irs_cumulative(pl, idx, kc, act) <= cfg.low_cutoff))
+                 | irs_cum_leq(pl, idx, kc, act, cfg.low_cutoff))
     if pop.any():
         sub = idx[pop]
         w = stall[sub, stall_len[sub] - 1]
@@ -289,7 +325,7 @@ def ciao_low_tick(pl: DetPlanes, stall: np.ndarray, stall_len: np.ndarray,
     k2 = pl.pair_list[idx, tic % le, 0]
     k2c = np.where(k2 >= 0, k2, 0)
     pop2 = ok & ((k2 == NO_WARP) | fin[idx, k2c]
-                 | (irs_cumulative(pl, idx, k2c, act) <= cfg.low_cutoff))
+                 | irs_cum_leq(pl, idx, k2c, act, cfg.low_cutoff))
     if pop2.any():
         sub = idx[pop2]
         w = iso[sub, iso_len[sub] - 1]
@@ -300,45 +336,68 @@ def ciao_low_tick(pl: DetPlanes, stall: np.ndarray, stall_len: np.ndarray,
     return changed
 
 
-def ciao_high_tick_cell(pl: DetPlanes, b: int, stall: np.ndarray,
-                        stall_len: np.ndarray, iso: np.ndarray,
-                        iso_len: np.ndarray, allowed: np.ndarray,
-                        isolated: np.ndarray, fin: np.ndarray,
-                        alive_row: np.ndarray, mode_p: bool,
-                        mode_t: bool) -> bool:
-    """Algorithm 1 lines 20-28 for one cell ``b`` over the planes: walk
-    the active warps by descending high-epoch IRS and take (at most) one
-    isolate/stall action. High epochs are 20x rarer than low epochs, so
-    this stays a short per-cell loop; the IRS sort is vectorized.
-    Returns True when a mask changed."""
+def ciao_high_tick(pl: DetPlanes, stall: np.ndarray,
+                   stall_len: np.ndarray, iso: np.ndarray,
+                   iso_len: np.ndarray, allowed: np.ndarray,
+                   isolated: np.ndarray, fin: np.ndarray,
+                   alive: np.ndarray, mode_p: np.ndarray,
+                   mode_t: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Algorithm 1 lines 20-28 across cells ``idx``: walk each cell's
+    active warps by descending high-epoch IRS and take (at most) one
+    isolate/stall action per cell.
+
+    ``alive`` (k, n) bool and ``mode_p``/``mode_t`` (k,) bool align with
+    ``idx``; the stack/mask planes are full-batch like
+    :func:`ciao_low_tick`. The per-cell action walk is fully batched:
+    every condition reads pre-tick state and at most one scatter fires
+    per cell, so cells cannot interact. Candidate order is the stable
+    descending sort on the snapshot's integer ``hits`` — within a cell
+    the snapshot is ``hits * (act/win)`` with one positive scale, so the
+    hits order *is* the IRS order. Returns the (k,) changed mask."""
     cfg = pl.cfg
-    alive = np.flatnonzero(alive_row)
-    if len(alive) <= 1:
-        return False
-    snap = pl.irs_high_snap[b]
-    nw = cfg.num_warps
-    le = cfg.list_entries
-    # stable sort == `sorted(alive, key=lambda w: -irs_high(w))`
-    scored = alive[np.argsort(-snap[alive % nw], kind="stable")]
-    fin_row = fin[b]
-    for i in scored:
-        if snap[i % nw] <= cfg.high_cutoff:
-            break
-        j = int(pl.interfering[b, i % le])
-        if j == NO_WARP or j == i or fin_row[j]:
-            continue
-        if mode_p and not isolated[b, j] and allowed[b, j]:
-            isolated[b, j] = True
-            pl.pair_list[b, j % le, 0] = i
-            iso[b, iso_len[b]] = j
-            iso_len[b] += 1
-            return True
-        if mode_t and allowed[b, j] and (isolated[b, j] or not mode_p):
-            if int(np.count_nonzero(alive != j)) < 1:
-                return False     # never stall the last active warp
-            allowed[b, j] = False
-            pl.pair_list[b, j % le, 1] = i
-            stall[b, stall_len[b]] = j
-            stall_len[b] += 1
-            return True
-    return False
+    nw, le = cfg.num_warps, cfg.list_entries
+    k, n = alive.shape
+    changed = np.zeros(k, bool)
+    if not k:
+        return changed
+    act = pl.high_snap_act[idx][:, None]
+    win = pl.high_snap_win[idx][:, None]
+    hits = pl.high_snap_hits[idx][:, np.arange(n) % nw]
+    # `snap > cutoff` gate; the scalar walk's sorted-order break at the
+    # first snap <= cutoff equals dropping every non-exceeding warp
+    cand = alive & snap_over(hits, win, act, cfg.high_cutoff) \
+        & (np.count_nonzero(alive, axis=1) > 1)[:, None]
+    order = np.argsort(np.where(cand, -hits, _DEAD_KEY), axis=1,
+                       kind="stable")          # (k, n) warp ids, desc IRS
+    cand_s = np.take_along_axis(cand, order, 1)
+    rows = idx[:, None]
+    j = pl.interfering[rows, order % le]
+    jc = np.where(j >= 0, j, 0)
+    valid = cand_s & (j != NO_WARP) & (j != order) & ~fin[rows, jc]
+    iso_j = isolated[rows, jc]
+    alw_j = allowed[rows, jc]
+    p_ok = valid & mode_p[:, None] & ~iso_j & alw_j
+    t_ok = valid & mode_t[:, None] & alw_j & (iso_j | ~mode_p[:, None])
+    hit = p_ok | t_ok
+    changed = hit.any(axis=1)
+    sel = np.flatnonzero(changed)
+    if not sel.size:
+        return changed
+    pos = np.argmax(hit[sel], axis=1)          # first actionable walk pos
+    take_p = p_ok[sel, pos]
+    jj = j[sel, pos]                           # the victim warp
+    ii = order[sel, pos]                       # the interferer
+    ps, ts = sel[take_p], sel[~take_p]
+    if ps.size:
+        bp, jp, ip = idx[ps], jj[take_p], ii[take_p]
+        isolated[bp, jp] = True
+        pl.pair_list[bp, jp % le, 0] = ip
+        iso[bp, iso_len[bp]] = jp
+        iso_len[bp] += 1
+    if ts.size:
+        bt, jt, it = idx[ts], jj[~take_p], ii[~take_p]
+        allowed[bt, jt] = False
+        pl.pair_list[bt, jt % le, 1] = it
+        stall[bt, stall_len[bt]] = jt
+        stall_len[bt] += 1
+    return changed

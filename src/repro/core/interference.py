@@ -105,8 +105,6 @@ class InterferenceDetector:
     sat_counter = _plane_prop("sat")
     pair_list = _plane_prop("pair_list")
     irs_hits = _plane_prop("irs_hits")
-    irs_low_snap = _plane_prop("irs_low_snap")
-    irs_high_snap = _plane_prop("irs_high_snap")
     inst_total = _scalar_prop("inst_total")
     irs_inst = _scalar_prop("irs_inst")
 
@@ -180,10 +178,16 @@ class InterferenceDetector:
         return bool(low[0]), bool(high[0])
 
     def irs_low(self, wid: int) -> float:
-        return float(self._pl.irs_low_snap[0, wid % self.cfg.num_warps])
+        """Last low-epoch windowed IRS, from the fixed-point snapshot
+        triple (reporting; cutoff decisions use the int compare)."""
+        pl = self._pl
+        h = int(pl.low_snap_hits[0, wid % self.cfg.num_warps])
+        return h * int(pl.low_snap_act[0]) / int(pl.low_snap_win[0])
 
     def irs_high(self, wid: int) -> float:
-        return float(self._pl.irs_high_snap[0, wid % self.cfg.num_warps])
+        pl = self._pl
+        h = int(pl.high_snap_hits[0, wid % self.cfg.num_warps])
+        return h * int(pl.high_snap_act[0]) / int(pl.high_snap_win[0])
 
     def most_interfering(self, wid: int) -> int:
         return int(self._pl.interfering[0, wid % self.cfg.list_entries])

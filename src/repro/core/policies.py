@@ -358,13 +358,14 @@ class CIAOPolicy(BasePolicy):
             self.mask_version += 1
 
     def high_epoch_tick(self, active, finished) -> None:
-        changed = _epoch.ciao_high_tick_cell(
-            self.det._pl, 0, self._stall[None], self._stall_len,
+        changed = _epoch.ciao_high_tick(
+            self.det._pl, self._stall[None], self._stall_len,
             self._iso[None], self._iso_len, self.allowed_mask[None],
             self.isolated_mask[None], self._fin_row(finished)[None],
-            self._alive_mask(active, finished),
-            self.mode in ("p", "c"), self.mode in ("t", "c"))
-        if changed:
+            self._alive_mask(active, finished)[None],
+            np.asarray([self.mode in ("p", "c")]),
+            np.asarray([self.mode in ("t", "c")]), _epoch.IDX0)
+        if changed[0]:
             self.mask_version += 1
 
     def stall_directly(self, j: int, trigger: int) -> bool:

@@ -66,7 +66,7 @@ from repro.workloads.io import load_workload, save_workload
 
 SCHEMA_VERSION = 1
 BASE_VARIANT = "base"
-ENGINES = ("auto", "batched", "process")
+ENGINES = ("auto", "batched", "process", "jax")
 # "auto" switches to the batched engine for grids at least this wide
 AUTO_MIN_BATCH = 8
 
@@ -249,16 +249,23 @@ def last_batched_perf() -> Dict[str, float]:
     return dict(_LAST_BATCHED_PERF)
 
 
-def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
+def _run_cells_batched(cells: Sequence[_Cell],
+                       backend: Optional[str] = None) -> List[RunRecord]:
     """Run batchable cells through the lockstep engine: flatten Best-SWL
     / statPCAL limit sweeps into per-limit subcells, group by (SimConfig,
     GPU shape), chunk groups under a token-plane memory budget, run each
     chunk as one batch, and reduce the sweeps back (first-best on ties,
-    exactly like ``run_policy_sweep`` / ``run_gpu_policy_sweep``)."""
+    exactly like ``run_policy_sweep`` / ``run_gpu_policy_sweep``).
+
+    ``backend`` overrides ``$REPRO_BATCHED_BACKEND`` (the engine's
+    stepper choice). ``"jax"`` applies to single-SM chunks only;
+    multi-SM chunks silently fall back to ``"auto"`` — the jax stepper
+    does not interleave SM phases over shared post-L1 planes yet."""
     import time as _time
 
     from repro.core.batched import BatchCell, BatchedSMEngine
-    backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
+    if backend is None:
+        backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
     perf = _LAST_BATCHED_PERF
     perf.clear()
     perf.update(group_build_s=0.0, engine_build_s=0.0,
@@ -290,8 +297,9 @@ def _run_cells_batched(cells: Sequence[_Cell]) -> List[RunRecord]:
 
     results: Dict[int, List] = {}
     for cfg, gpu, chunk in chunks:
+        be = "auto" if (backend == "jax" and gpu is not None) else backend
         eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
-                              backend=backend, gpu=gpu)
+                              backend=be, gpu=gpu)
         for (i, j, _), res in zip(chunk, eng.run()):
             results.setdefault(i, []).append((j, res))
         perf["engine_build_s"] += eng.perf["build_s"]
@@ -381,13 +389,20 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
     order regardless of execution order or engine."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    if engine == "jax":
+        from repro.core import jax_backend
+        if not jax_backend.available():
+            raise RuntimeError("engine='jax' requested but "
+                               + jax_backend.unavailable_reason())
     cells = expand_grid(grid)
     records: List[Optional[RunRecord]] = [None] * len(cells)
     if engine != "process":
         batch_idx = [i for i, c in enumerate(cells) if _batchable(c)]
-        if engine == "batched" or len(batch_idx) >= AUTO_MIN_BATCH:
+        if engine in ("batched", "jax") \
+                or len(batch_idx) >= AUTO_MIN_BATCH:
             for i, rec in zip(batch_idx, _run_cells_batched(
-                    [cells[i] for i in batch_idx])):
+                    [cells[i] for i in batch_idx],
+                    backend="jax" if engine == "jax" else None)):
                 records[i] = rec
     rest = [i for i in range(len(cells)) if records[i] is None]
     if rest:

@@ -9,6 +9,8 @@ sets of cells are built from one seed; set A ticks through the objects
 cell by cell, set B is adopted into full-batch planes (the engine's
 ``adopt_*`` path) and ticked by one kernel call, mirroring
 ``BatchedSMEngine._epoch_batch``."""
+from fractions import Fraction
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -110,13 +112,13 @@ def _batch_tick(dets, pols, done, util):
         if lo.size:
             _epoch.ciao_low_tick(pl, stall, stall_len, iso, iso_len,
                                  allowed, isolated, done, n_act[low], lo)
-        for j in np.flatnonzero(high):
-            b = int(idx[j])
-            alive = allowed[b] & ~done[b]
-            _epoch.ciao_high_tick_cell(
-                pl, b, stall, stall_len, iso, iso_len, allowed,
-                isolated, done, alive, pol0.mode in ("p", "c"),
-                pol0.mode in ("t", "c"))
+        hi = idx[high]
+        if hi.size:
+            _epoch.ciao_high_tick(
+                pl, stall, stall_len, iso, iso_len, allowed,
+                isolated, done, allowed[hi] & ~done[hi],
+                np.full(len(hi), pol0.mode in ("p", "c")),
+                np.full(len(hi), pol0.mode in ("t", "c")), hi)
     return pl
 
 
@@ -164,6 +166,50 @@ def test_batched_kernels_equal_per_cell_objects(seed, family):
             np.testing.assert_array_equal(
                 getattr(det_a._pl, f)[0], getattr(pl_b, f)[b],
                 f"{tag}: detector plane {f}")
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 10**9), st.integers(0, 1 << 11))
+def test_cutoff_decisions_match_exact_rationals(seed, knum):
+    """The fixed-point scaling contract behind the shared cutoff
+    decisions: ``irs_cum_leq`` / ``snap_over`` evaluate the IRS compare
+    as the single-rounding product compare ``hits*act <> cutoff*X``. For
+    dyadic cutoffs (k/1024 — denominator a power of two) and counters in
+    the simulator's range both products are exactly representable in
+    f64, so the decision must equal arbitrary-precision rational
+    arithmetic bit-for-bit. This is what lets the numpy, C, and XLA
+    steppers share one decision kernel without drift. (The shipped
+    defaults 0.01/0.005 are non-dyadic: there the compare is still
+    single-rounding — one IEEE rounding total — and all three backends
+    evaluate the identical expression, which the golden and mixed-batch
+    equality tests pin.)"""
+    rng = np.random.default_rng(seed)
+    cutoff = knum / 1024.0
+    exact = Fraction(knum, 1024)
+    assert Fraction(cutoff) == exact        # dyadic: exactly a f64
+    pl = _epoch.DetPlanes.alloc(K, _det_cfg())
+    pl.irs_inst[:] = rng.integers(0, 1 << 20, K)
+    pl.irs_inst[rng.integers(0, K)] = 0     # exercise the 0-IRS guard
+    pl.irs_hits[:] = rng.integers(0, 1 << 16, (K, N))
+    idx = np.arange(K, dtype=np.int64)
+    wid = rng.integers(0, N, K)
+    act = rng.integers(0, N + 1, K)
+
+    got = _epoch.irs_cum_leq(pl, idx, wid, act, cutoff)
+    for b in range(K):
+        inst, a = int(pl.irs_inst[b]), int(act[b])
+        h = int(pl.irs_hits[b, wid[b] % N])
+        want = (inst <= 0 or a <= 0) or Fraction(h * a) <= exact * inst
+        assert bool(got[b]) == want, f"irs_cum_leq cell {b}"
+
+    hits = rng.integers(0, 1 << 16, (K, N)).astype(np.int64)
+    win = rng.integers(0, 1 << 20, K).astype(np.int64)
+    got2 = _epoch.snap_over(hits, win[:, None], act[:, None], cutoff)
+    for b in range(K):
+        for w in range(N):
+            want = Fraction(int(hits[b, w]) * int(act[b])) \
+                > exact * int(win[b])
+            assert bool(got2[b, w]) == want, f"snap_over {b},{w}"
 
 
 @pytest.mark.parametrize("family", ["ccws", "ciao-c"])
