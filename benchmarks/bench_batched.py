@@ -1,6 +1,6 @@
-"""PR-6 grid-throughput harness: batched lockstep engine (C / numpy /
-jitted-XLA steppers) vs the PR-2 spawn-pool path, written to
-``BENCH_PR6.json`` at the repo root.
+"""Grid-throughput harness: batched lockstep engine (C / numpy /
+jitted-XLA steppers, serial and thread-parallel) vs the PR-2 spawn-pool
+path, written to ``BENCH_PR7.json`` at the repo root.
 
 Measures end-to-end ``run_grid`` wall time on two grids, interleaved
 best-of-N in one process (the container's absolute speed drifts ~2x
@@ -14,7 +14,16 @@ between sessions, so only same-run ratios are meaningful):
   when jax imports);
 * a 2-SM shared-L2 **multi-SM** grid (the paper's multi-programmed
   contention setup) — ``pool`` vs ``batched``, the configuration the
-  engine could not batch before PR 5.
+  engine could not batch before PR 5;
+* a **jobs scaling curve** for the C-path batched engine —
+  ``batched_j2`` / ``batched_jN`` rerun the fig8 grid with the chunk
+  scheduler fanned over 2 / ``os.cpu_count()`` worker threads (the
+  ctypes stepper releases the GIL, so threads scale across cores).
+  Records are asserted equal to every serial leg; the headline
+  ``parallel`` block reports the per-jobs walls and ``speedup_at_2``.
+  On a single-core machine the curve is still measured (and is honestly
+  ~1.0x — there is nothing to scale onto); ``--floor-parallel`` is
+  skipped there so 1-core boxes don't fail a multicore guard.
 
 Every engine's records are asserted **equal** before any time is
 reported — the speedup is meaningless unless the grids agree cell for
@@ -49,17 +58,20 @@ Usage::
 
     python -m benchmarks.bench_batched [--quick] [--repeats N]
                                        [--scale S] [--jobs N]
-                                       [--out BENCH_PR6.json]
+                                       [--out BENCH_PR7.json]
                                        [--floor-ratio R]
                                        [--floor-multism R]
                                        [--floor-jax R]
+                                       [--floor-parallel R]
 
 ``--floor-ratio R`` exits nonzero if the fig8 batched/pool throughput
 ratio falls below R — the CI guard against regressing the batched
-engine. ``--floor-multism`` guards the multi-SM ratio and
-``--floor-jax`` the steady-state jax/pool ratio the same way (keep the
-jax floor a sanity bound, e.g. 0.25 — see the note above). Ratios, not
-absolute rates, so noisy runners do not flap the job.
+engine. ``--floor-multism`` guards the multi-SM ratio,
+``--floor-jax`` the steady-state jax/pool ratio (keep it a sanity
+bound, e.g. 0.25 — see the note above), and ``--floor-parallel`` the
+2-worker thread-scaling speedup (auto-skipped when ``os.cpu_count()``
+< 2). Ratios, not absolute rates, so noisy runners do not flap the
+job.
 """
 from __future__ import annotations
 
@@ -73,7 +85,7 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import emit, header
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
             "syrk", "gesummv", "syr2k", "ii",          # SWS
@@ -108,7 +120,7 @@ def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
         os.environ["REPRO_BATCHED_BACKEND"] = backend
     try:
         t0 = time.perf_counter()
-        records = run_grid(grid, processes=jobs, engine=engine)
+        records = run_grid(grid, jobs=jobs, engine=engine)
         wall = time.perf_counter() - t0
     finally:
         if backend:
@@ -120,18 +132,20 @@ def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
     return {"wall_s": wall, "records": records, "perf": perf}
 
 
-def _measure(grid, runs, repeats: int, jobs: int, label: str,
+def _measure(grid, runs, repeats: int, label: str,
              warm_walls: Optional[Dict[str, float]] = None) -> Dict:
-    """Interleaved best-of-N over the given (name, engine, backend)
-    runs; asserts every engine's records equal before reporting.
-    ``warm_walls`` maps run names to an untimed warm run's wall (one-time
-    trace/compile included); ``compile_s`` is that minus the steady
-    best, clamped at 0."""
-    walls: Dict[str, List[float]] = {name: [] for name, _, _ in runs}
+    """Interleaved best-of-N over the given (name, engine, backend,
+    jobs) runs; asserts every engine's records equal before reporting
+    (this is also the determinism check for the parallel legs — any
+    worker-count-dependent divergence trips it). ``warm_walls`` maps
+    run names to an untimed warm run's wall (one-time trace/compile
+    included); ``compile_s`` is that minus the steady best, clamped
+    at 0."""
+    walls: Dict[str, List[float]] = {name: [] for name, _, _, _ in runs}
     breakdown: Dict[str, Dict] = {}
     ref_records = None
     for _ in range(repeats):
-        for name, engine, backend in runs:
+        for name, engine, backend, jobs in runs:
             r = _time_engine(grid, engine, jobs, backend)
             if not walls[name] or r["wall_s"] < min(walls[name]):
                 if r["perf"]:
@@ -171,7 +185,7 @@ def main() -> int:
                     help="trace scale (default 0.5, quick 0.2)")
     ap.add_argument("--jobs", type=int, default=2,
                     help="spawn-pool workers for the baseline")
-    ap.add_argument("--out", default="BENCH_PR6.json")
+    ap.add_argument("--out", default="BENCH_PR7.json")
     ap.add_argument("--floor-ratio", type=float, default=0.0,
                     help="fail if fig8 batched/pool ratio is below")
     ap.add_argument("--floor-multism", type=float, default=0.0,
@@ -179,6 +193,11 @@ def main() -> int:
     ap.add_argument("--floor-jax", type=float, default=0.0,
                     help="fail if the steady-state jax/pool ratio is "
                          "below (sanity bound; see module docstring)")
+    ap.add_argument("--floor-parallel", type=float, default=0.0,
+                    help="fail if the 2-worker batched speedup over "
+                         "1 worker is below (skipped on 1-core hosts)")
+    ap.add_argument("--skip-parallel", action="store_true",
+                    help="skip the jobs scaling curve")
     ap.add_argument("--skip-numpy", action="store_true",
                     help="skip the pure-numpy stepper measurement")
     ap.add_argument("--skip-jax", action="store_true",
@@ -225,12 +244,21 @@ def main() -> int:
         emit("batched/fig8/jax_warm", 0.0,
              f"wall={warm_walls['batched_jax']:.2f}s")
 
-    runs = [("batched", "batched", "auto"), ("pool", "process", "")]
+    # "batched" stays the serial (jobs=1) leg for continuity with the
+    # PR 4-6 trajectory; the jobs curve adds thread-parallel legs at 2
+    # and (when wider) os.cpu_count() workers
+    cpus = os.cpu_count() or 1
+    curve_jobs = [] if args.skip_parallel else \
+        sorted({2, cpus} - {1})
+    runs = [("batched", "batched", "auto", 1),
+            ("pool", "process", "", args.jobs)]
+    for j in curve_jobs:
+        runs.append((f"batched_j{j}", "batched", "auto", j))
     if not args.skip_numpy:
-        runs.append(("batched_numpy", "batched", "numpy"))
+        runs.append(("batched_numpy", "batched", "numpy", 1))
     if jax_on:
-        runs.append(("batched_jax", "jax", ""))
-    fig8 = _measure(grid, runs, repeats, args.jobs, "fig8", warm_walls)
+        runs.append(("batched_jax", "jax", "", 1))
+    fig8 = _measure(grid, runs, repeats, "fig8", warm_walls)
 
     ms: Optional[Dict] = None
     ms_grid = None
@@ -241,9 +269,9 @@ def main() -> int:
                              workload_seed(cell.seed, cell.workload),
                              cell.scale)
         ms = _measure(ms_grid,
-                      [("batched", "batched", "auto"),
-                       ("pool", "process", "")],
-                      repeats, args.jobs, "2sm")
+                      [("batched", "batched", "auto", 1),
+                       ("pool", "process", "", args.jobs)],
+                      repeats, "2sm")
 
     doc: Dict = {
         "schema": SCHEMA_VERSION,
@@ -276,7 +304,8 @@ def main() -> int:
         }
 
     pool_wall = doc["results"]["pool"]["wall_s"]
-    ratio = pool_wall / doc["results"]["batched"]["wall_s"]
+    serial_wall = doc["results"]["batched"]["wall_s"]
+    ratio = pool_wall / serial_wall
     np_r = doc["results"].get("batched_numpy")
     jax_r = doc["results"].get("batched_jax")
     jax_ratio = (pool_wall / jax_r["wall_s"]) if jax_r else None
@@ -284,8 +313,24 @@ def main() -> int:
     if ms is not None:
         ms_ratio = ms["results"]["pool"]["wall_s"] / \
             ms["results"]["batched"]["wall_s"]
+    jobs_curve = {1: serial_wall}
+    for j in curve_jobs:
+        jobs_curve[j] = doc["results"][f"batched_j{j}"]["wall_s"]
+    speedup_at_2 = (serial_wall / jobs_curve[2]) if 2 in jobs_curve \
+        else None
     doc["headline"] = {
         "ratio_vs_pool": ratio,
+        "parallel": {
+            "cpus": cpus,
+            # jobs -> best C-path batched wall; threads over the
+            # GIL-releasing ctypes stepper, records equal to serial
+            "jobs_curve_wall_s": {str(j): w
+                                  for j, w in sorted(jobs_curve.items())},
+            "speedup_at_2": speedup_at_2,
+            "note": "on a 1-core host the curve is flat by "
+                    "construction; the floor only applies when "
+                    "cpus >= 2",
+        },
         "numpy_ratio_vs_pool": (pool_wall / np_r["wall_s"])
                                if np_r else None,
         "jax_ratio_vs_pool": jax_ratio,
@@ -300,6 +345,9 @@ def main() -> int:
                 "see the module docstring.",
     }
     emit("batched/ratio", 0.0, f"{ratio:.2f}x")
+    if speedup_at_2 is not None:
+        emit("batched/parallel_j2", 0.0,
+             f"{speedup_at_2:.2f}x;cpus={cpus}")
     if jax_ratio is not None:
         emit("batched/ratio_jax", 0.0, f"{jax_ratio:.2f}x")
     if ms_ratio is not None:
@@ -330,6 +378,20 @@ def main() -> int:
     elif args.floor_jax and jax_ratio is not None:
         emit("batched/floor_jax", 0.0,
              f"ok:{jax_ratio:.2f}x>={args.floor_jax:.2f}x")
+    if args.floor_parallel and speedup_at_2 is not None:
+        if cpus < 2:
+            # a second worker thread has no second core to land on:
+            # the guard would only measure scheduler noise here
+            print(f"# floor-parallel skipped: host has {cpus} cpu(s), "
+                  "nothing to scale onto")
+        elif speedup_at_2 < args.floor_parallel:
+            print(f"# FAIL: 2-worker batched speedup "
+                  f"{speedup_at_2:.2f}x below floor "
+                  f"{args.floor_parallel:.2f}x")
+            fail = True
+        else:
+            emit("batched/floor_parallel", 0.0,
+                 f"ok:{speedup_at_2:.2f}x>={args.floor_parallel:.2f}x")
     return 1 if fail else 0
 
 

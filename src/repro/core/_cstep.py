@@ -21,6 +21,7 @@ import pathlib
 import shutil
 import subprocess
 import tempfile
+import threading
 from typing import Optional
 
 _c_i64 = ctypes.c_longlong
@@ -111,6 +112,11 @@ class Params(ctypes.Structure):
 
 _lib = None
 _err: Optional[str] = None
+# compile-and-load is not reentrant (mkstemp + subprocess + os.replace
+# + CDLL): serialise it so parallel chunk workers racing on first use
+# build the .so once. The cross-*process* race stays handled by the
+# atomic os.replace into the hash-keyed cache path.
+_LOAD_LOCK = threading.Lock()
 
 
 def _compiler() -> Optional[str]:
@@ -121,6 +127,14 @@ def _load() -> None:
     global _lib, _err
     if _lib is not None or _err is not None:
         return
+    with _LOAD_LOCK:
+        if _lib is not None or _err is not None:
+            return
+        _load_locked()
+
+
+def _load_locked() -> None:
+    global _lib, _err
     if os.environ.get("REPRO_NO_CSTEP"):
         _err = "disabled via REPRO_NO_CSTEP"
         return

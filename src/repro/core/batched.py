@@ -159,8 +159,9 @@ class BatchedSMEngine:
         if not self.n_cells:
             raise ValueError("empty batch")
         self.B = self.n_cells * self.S        # rows
-        # time-breakdown accumulators (seconds); for the C path stepper
-        # and drain are disjoint, for numpy drain is a subset of stepper
+        # time-breakdown accumulators (seconds); stepper and drain are
+        # disjoint for both the C and numpy paths (each round is a
+        # run-to-pause stepper stretch followed by one batched drain)
         self.perf: Dict[str, float] = {"build_s": 0.0, "stepper_s": 0.0,
                                        "drain_s": 0.0, "rounds": 0.0}
         t0 = time.perf_counter()
@@ -882,17 +883,55 @@ class BatchedSMEngine:
             self._finalize(int(b))
 
     # ------------------------------------------------- numpy lockstep
+    # drain cadence: service accumulated pauses every this many
+    # iterations. Servicing an epoch costs ~0.4ms of fixed numpy call
+    # overhead regardless of how many rows it covers, so batching the
+    # crossings of a whole stretch (vs the old service-inline-per-
+    # iteration scheme) amortises that overhead over every row that
+    # crossed. The cadence caps the other side of the trade: a paused
+    # row sits out at most this many iterations, and since one masked
+    # iteration costs full batch width no matter how many rows are
+    # active, letting pauses pile up until the batch fully stalls
+    # (C-style whole-round drains) *inflates* total iterations — rows
+    # without epochs (GTO/Best-SWL never pause) would run to completion
+    # while everyone else waits (measured 1.7x stepper blow-up).
+    _NP_DRAIN_EVERY = 8
+
     def _np_round(self) -> None:
-        live, runnable = self.live, self.runnable
+        """Run-to-pause stretches with a bounded cadence: iterate rows
+        that have no pending pause flag, every ``_NP_DRAIN_EVERY``
+        iterations service *all* paused rows in one batched
+        ``_drain_pauses`` pass. Rows are independent simulations —
+        delaying a paused row in wall-time while the rest of the batch
+        advances cannot change that row's own event sequence — so
+        results are bit-identical to the inline scheme.
+        """
+        perf = self.perf
+        every = self._NP_DRAIN_EVERY
+        live, runnable, pause = self.live, self.runnable, self.pause
         while bool((live & runnable).any()):
-            self._np_iteration()
+            k = 0
+            while k < every and \
+                    bool((live & runnable & (pause == 0)).any()):
+                self._np_iteration()
+                k += 1
+            if pause.any():
+                t0 = time.perf_counter()
+                self._drain_pauses()
+                dt = time.perf_counter() - t0
+                perf["drain_s"] += dt
+                perf["stepper_s"] -= dt    # counted by _run_sliced
+                perf["rounds"] += 1
 
     def _np_iteration(self) -> None:
         """One lockstep iteration: one scheduler dispatch per runnable
         row, all rows advanced by masked vectorized updates. Mirrors one
         trip through the scalar ``while`` loop of ``SMSimulator.advance``.
+        Rows that cross an epoch (or hit a later check with a pause
+        already pending) raise a pause flag and sit out until the
+        round's drain services them.
         """
-        act = self.live & self.runnable
+        act = self.live & self.runnable & (self.pause == 0)
         cycle = self.cycle
         # rows at their slice boundary stop (scalar loop condition)
         hit = act & (cycle >= self.until)
@@ -926,12 +965,18 @@ class BatchedSMEngine:
                 if thr.any():
                     # everything throttled: advance to let epochs fire
                     # (the scalar loop does NOT re-anchor next_epoch)
+                    # serviced inline, not deferred to the round drain:
+                    # a throttled row may need many consecutive
+                    # low_epoch advances and pausing each one would
+                    # stall the row for a whole round per advance
                     ti = np.flatnonzero(thr)
                     cycle[ti] += self.low_epoch
                     self.li[ti] += self.low_epoch
                     t0 = time.perf_counter()
                     self._epoch_batch(ti, np.zeros(len(ti), bool))
-                    self.perf["drain_s"] += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    self.perf["drain_s"] += dt
+                    self.perf["stepper_s"] -= dt
                 sk = skip & ~thr
                 if sk.any():
                     best = ready_f[rowoff + w2]
@@ -989,18 +1034,30 @@ class BatchedSMEngine:
             np.copyto(self.last_wid, -1, where=fin)
             fi = np.flatnonzero(fin)
             self._warp_done_rows(fi, widc[fi])
+        # epoch crossings pause for the round drain: one batched
+        # _epoch_batch call then services every row that crossed this
+        # round (the call's fixed overhead dominates at 1-2 rows)
         ep = disp & (self.li >= self.next_epoch)
         if ep.any():
-            ei = np.flatnonzero(ep)
-            t0 = time.perf_counter()
-            self._epoch_batch(ei, np.ones(len(ei), bool))
-            self.perf["drain_s"] += time.perf_counter() - t0
+            self.pause[np.flatnonzero(ep)] |= P_EPOCH
+        # later checks on a dispatch that already pended a pause must
+        # defer too, preserving the scalar per-dispatch order (epoch →
+        # timeline → finalize); ep is the only pause set above, so it
+        # is exactly the pending mask here
         tl = disp & (self.instr >= self.window_mark)
         if tl.any():
-            self._timeline_rows(np.flatnonzero(tl))
+            tl_now = tl & ~ep
+            if tl_now.any():
+                self._timeline_rows(np.flatnonzero(tl_now))
+            tl_defer = tl & ep
+            if tl_defer.any():
+                self.pause[np.flatnonzero(tl_defer)] |= P_TIMELINE
         if fin.any():
             for b in fi[self.remaining[fi] == 0]:
-                self._finalize(int(b))
+                if self.pause[b]:
+                    self.pause[b] |= P_FINALIZE
+                else:
+                    self._finalize(int(b))
 
     def _np_mem_chain(self, mem, tok, widc, rw, cycle, new_ready):
         """The fused per-access chain, vectorized over the batch axis.

@@ -49,15 +49,17 @@ Example::
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
-import functools
 import json
 import multiprocessing
 import os
 import pathlib
+import threading
 import zlib
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import SimConfig, run_policy_sweep
@@ -138,16 +140,20 @@ def workload_cache_dir() -> Optional[pathlib.Path]:
     return pathlib.Path(val) if val else None
 
 
-@functools.lru_cache(maxsize=256)
-def _cached_workload(name: str, seed: int, scale: float):
-    """Two-level workload cache.
+# in-memory workload cache: an explicit LRU instead of functools'
+# lru_cache so parallel chunk workers get per-key locking — two threads
+# asking for the same (name, seed, scale) must not both pay the
+# generate/disk-load, and an OrderedDict mutation is not atomic under
+# free-threaded access patterns we want to be robust to.
+_WL_CACHE_SIZE = 256
+_WL_CACHE: "collections.OrderedDict[Tuple[str, int, float], Any]" = \
+    collections.OrderedDict()
+_WL_GUARD = threading.Lock()                   # protects the two dicts
+_WL_KEY_LOCKS: Dict[Tuple[str, int, float], threading.Lock] = {}
 
-    In memory: a grid re-uses one workload across every policy × variant
-    cell (generation costs ~100ms per workload and used to be repeated
-    per cell); the 256-entry bound replaces the old 32, which thrashed
-    on grids wider than 32 workload cells. Safe to share because nothing
-    mutates trace arrays — the simulator compiles its own token streams
-    and the GPU model's address-offset copies allocate fresh arrays.
+
+def _load_or_make_workload(name: str, seed: int, scale: float):
+    """Disk cache → curated set → generate (with atomic disk write).
 
     On disk: ``results/workloads/<name>-s<seed>-x<scale>.npz`` via the
     versioned :mod:`repro.workloads.io` format, so spawn workers and the
@@ -171,7 +177,8 @@ def _cached_workload(name: str, seed: int, scale: float):
         return wl
     wl = make_workload(name, seed=seed, scale=scale)
     if path is not None:
-        tmp = cache / f".{name}-s{seed}-x{scale:g}.{os.getpid()}.tmp.npz"
+        tmp = cache / (f".{name}-s{seed}-x{scale:g}"
+                       f".{os.getpid()}.{threading.get_ident()}.tmp.npz")
         try:
             save_workload(wl, tmp)
             os.replace(tmp, path)
@@ -179,6 +186,50 @@ def _cached_workload(name: str, seed: int, scale: float):
             with contextlib.suppress(OSError):
                 tmp.unlink()
     return wl
+
+
+def _cached_workload(name: str, seed: int, scale: float):
+    """Two-level, thread-safe workload cache.
+
+    In memory: a grid re-uses one workload across every policy × variant
+    cell (generation costs ~100ms per workload and used to be repeated
+    per cell); 256 entries so wide grids don't thrash. Safe to share
+    across threads because nothing mutates trace arrays — the simulator
+    compiles its own token streams and the GPU model's address-offset
+    copies allocate fresh arrays. A per-key lock serialises the miss
+    path (one generation per workload, not one per worker thread) while
+    hits on other keys proceed concurrently.
+    """
+    key = (name, seed, scale)
+    with _WL_GUARD:
+        wl = _WL_CACHE.get(key, None)
+        if wl is not None:
+            _WL_CACHE.move_to_end(key)
+            return wl
+        klock = _WL_KEY_LOCKS.setdefault(key, threading.Lock())
+    with klock:
+        with _WL_GUARD:                       # another thread filled it
+            wl = _WL_CACHE.get(key, None)
+            if wl is not None:
+                _WL_CACHE.move_to_end(key)
+                return wl
+        wl = _load_or_make_workload(name, seed, scale)
+        with _WL_GUARD:
+            _WL_CACHE[key] = wl
+            _WL_CACHE.move_to_end(key)
+            while len(_WL_CACHE) > _WL_CACHE_SIZE:
+                _WL_CACHE.popitem(last=False)
+    return wl
+
+
+def _workload_cache_clear() -> None:
+    with _WL_GUARD:
+        _WL_CACHE.clear()
+        _WL_KEY_LOCKS.clear()
+
+
+# keep the lru_cache-style handle the tests (and any callers) rely on
+_cached_workload.cache_clear = _workload_cache_clear
 
 
 def _run_cell(cell: _Cell) -> RunRecord:
@@ -236,21 +287,104 @@ def _batchable(cell: _Cell) -> bool:
 _BATCH_TOKEN_BUDGET = 192 * 1024 * 1024
 _BATCH_MAX_CELLS = 256
 
-# time breakdown of the most recent batched run_grid (bench_batched
-# reports it so epoch-path regressions stay attributable):
-#   group_build_s — workload load + sweep flattening + chunking
-#   engine_build_s — state stacking inside BatchedSMEngine
-#   stepper_s / drain_s — in-stepper vs pause-drain time
-_LAST_BATCHED_PERF: Dict[str, float] = {}
+
+def batch_token_budget() -> int:
+    """Per-chunk token-plane byte budget; ``$REPRO_BATCH_TOKEN_BUDGET``
+    overrides the 192 MiB default (small values force chunk streaming —
+    many small engines built, run, and freed in sequence)."""
+    val = os.environ.get("REPRO_BATCH_TOKEN_BUDGET", "")
+    if val:
+        with contextlib.suppress(ValueError):
+            return max(int(val), 1)
+    return _BATCH_TOKEN_BUDGET
+
+
+def batch_workers(requested: Optional[int] = None) -> int:
+    """Worker-thread count for the batched engine: the explicit
+    ``jobs``/``processes`` argument wins, else ``$REPRO_BATCH_WORKERS``,
+    else 1 (serial)."""
+    if requested is not None:
+        return max(int(requested), 1)
+    val = os.environ.get("REPRO_BATCH_WORKERS", "")
+    if val:
+        with contextlib.suppress(ValueError):
+            return max(int(val), 1)
+    return 1
+
+
+class _PlaneMeter:
+    """High-water mark of concurrently-live stacked token-plane bytes.
+
+    Chunk streaming only helps if the freed planes actually bound the
+    footprint, so every worker registers its engine's plane on build and
+    releases it after reduce; the peak is reported in the run's perf."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.cur = 0
+        self.peak = 0
+
+    def add(self, n: int) -> None:
+        with self._lock:
+            self.cur += n
+            if self.cur > self.peak:
+                self.peak = self.cur
+
+    def sub(self, n: int) -> None:
+        with self._lock:
+            self.cur -= n
+
+
+# per-thread handle for the compat shim below; the perf dict itself is
+# per-run (returned by _run_cells_batched), so concurrent run_grid calls
+# in different threads no longer race on a mutated module global
+_TLS = threading.local()
 
 
 def last_batched_perf() -> Dict[str, float]:
-    """Breakdown of the last batched ``run_grid`` (empty if none ran)."""
-    return dict(_LAST_BATCHED_PERF)
+    """Breakdown of this thread's most recent batched ``run_grid``
+    (empty if none ran). Compat shim over the per-run perf dict —
+    keys:
+
+    * ``group_build_s`` — workload load + sweep flattening + chunking
+    * ``engine_build_s`` — state stacking inside BatchedSMEngine
+    * ``stepper_s`` / ``drain_s`` — in-stepper vs pause-drain time
+      (summed across workers, so with ``jobs > 1`` they exceed wall)
+    * ``rounds`` / ``batches`` / ``chunks`` — loop + chunking counts
+    * ``workers`` — thread-pool width used
+    * ``peak_token_plane_bytes`` — high-water mark of concurrently
+      live stacked token planes (the streaming memory bound)
+    """
+    perf = getattr(_TLS, "batched_perf", None)
+    return dict(perf) if perf else {}
+
+
+def _shard_chunks(chunks: List[Tuple], workers: int) -> List[Tuple]:
+    """Split oversized chunks so at least ``workers`` chunks exist (when
+    the cell count allows): a grid that chunked into fewer batches than
+    workers would leave cores idle. Halving the largest chunk at a cell
+    boundary is *exact* — cells in a batch never share planes with each
+    other (each cell carries its own hierarchy; multi-SM rows only share
+    planes within their own cell), so any partition of a batch runs the
+    identical per-cell program."""
+    if workers <= 1:
+        return chunks
+    out = list(chunks)
+    while len(out) < workers:
+        k = max(range(len(out)), key=lambda n: len(out[n][2]))
+        cfg, gpu, chunk = out[k]
+        if len(chunk) < 2:
+            break
+        mid = len(chunk) // 2
+        out[k] = (cfg, gpu, chunk[:mid])
+        out.insert(k + 1, (cfg, gpu, chunk[mid:]))
+    return out
 
 
 def _run_cells_batched(cells: Sequence[_Cell],
-                       backend: Optional[str] = None) -> List[RunRecord]:
+                       backend: Optional[str] = None,
+                       workers: int = 1,
+                       ) -> Tuple[List[RunRecord], Dict[str, float]]:
     """Run batchable cells through the lockstep engine: flatten Best-SWL
     / statPCAL limit sweeps into per-limit subcells, group by (SimConfig,
     GPU shape), chunk groups under a token-plane memory budget, run each
@@ -260,16 +394,28 @@ def _run_cells_batched(cells: Sequence[_Cell],
     ``backend`` overrides ``$REPRO_BATCHED_BACKEND`` (the engine's
     stepper choice). ``"jax"`` applies to single-SM chunks only;
     multi-SM chunks silently fall back to ``"auto"`` — the jax stepper
-    does not interleave SM phases over shared post-L1 planes yet."""
+    does not interleave SM phases over shared post-L1 planes yet.
+
+    ``workers > 1`` dispatches chunks to a thread pool. The C stepper
+    calls ``step_cells`` via ctypes, which releases the GIL, so threads
+    scale across cores with zero pickling; each chunk's token planes are
+    stacked inside its worker (streaming) and freed once its results are
+    extracted, so memory stays bounded by budget × workers, not grid
+    size. Chunks launch largest-first (LPT) but records are reassembled
+    by cell index, so output is byte-identical to the serial order at
+    any worker count. Returns ``(records, perf)``.
+    """
     import time as _time
 
     from repro.core.batched import BatchCell, BatchedSMEngine
     if backend is None:
         backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
-    perf = _LAST_BATCHED_PERF
-    perf.clear()
-    perf.update(group_build_s=0.0, engine_build_s=0.0,
-                stepper_s=0.0, drain_s=0.0, rounds=0.0, batches=0.0)
+    if backend == "jax":
+        workers = 1          # one XLA dispatch queue; threads just queue
+    perf: Dict[str, float] = dict(
+        group_build_s=0.0, engine_build_s=0.0, stepper_s=0.0,
+        drain_s=0.0, rounds=0.0, batches=0.0, chunks=0.0,
+        workers=float(workers), peak_token_plane_bytes=0.0)
     t0 = _time.perf_counter()
     # (cell index, limit ordinal, BatchCell); (cfg, gpu) groups chunks
     groups: Dict[str, List[Tuple[int, int, BatchCell]]] = {}
@@ -293,20 +439,49 @@ def _run_cells_batched(cells: Sequence[_Cell],
         first = cells[sub[0][0]]
         for chunk in _chunk_batch(sub, first.gpu):
             chunks.append((first.cfg, first.gpu, chunk))
+    chunks = _shard_chunks(chunks, workers)
+    perf["chunks"] = float(len(chunks))
+    # LPT order: start the biggest chunks first so the tail of the run
+    # is short chunks, not one straggler. Determinism is unaffected —
+    # results merge by (cell index, limit ordinal) below.
+    order = sorted(range(len(chunks)),
+                   key=lambda n: (-len(chunks[n][2]), n))
     perf["group_build_s"] += _time.perf_counter() - t0
 
-    results: Dict[int, List] = {}
-    for cfg, gpu, chunk in chunks:
-        be = "auto" if (backend == "jax" and gpu is not None) else backend
+    meter = _PlaneMeter()
+
+    def _run_chunk(n: int):
+        cfg, gpu, chunk = chunks[n]
+        be = ("auto" if (backend == "jax" and gpu is not None)
+              else backend)
         eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
                               backend=be, gpu=gpu)
-        for (i, j, _), res in zip(chunk, eng.run()):
+        nbytes = int(eng.toks.nbytes)
+        meter.add(nbytes)
+        try:
+            triples = [(i, j, res)
+                       for (i, j, _), res in zip(chunk, eng.run())]
+            return triples, dict(eng.perf)
+        finally:
+            meter.sub(nbytes)
+        # eng (and its stacked planes) dies here — streaming
+
+    if workers > 1 and len(chunks) > 1:
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            outs = list(pool.map(_run_chunk, order))
+    else:
+        outs = [_run_chunk(n) for n in order]
+
+    results: Dict[int, List] = {}
+    for triples, eperf in outs:
+        for i, j, res in triples:
             results.setdefault(i, []).append((j, res))
-        perf["engine_build_s"] += eng.perf["build_s"]
-        perf["stepper_s"] += eng.perf["stepper_s"]
-        perf["drain_s"] += eng.perf["drain_s"]
-        perf["rounds"] += eng.perf["rounds"]
+        perf["engine_build_s"] += eperf["build_s"]
+        perf["stepper_s"] += eperf["stepper_s"]
+        perf["drain_s"] += eperf["drain_s"]
+        perf["rounds"] += eperf["rounds"]
         perf["batches"] += 1
+    perf["peak_token_plane_bytes"] = float(meter.peak)
 
     t0 = _time.perf_counter()
     records = []
@@ -343,7 +518,7 @@ def _run_cells_batched(cells: Sequence[_Cell],
                 stats=dict(best.stats),
                 pairs=[list(p) for p in best.pairs]))
     perf["group_build_s"] += _time.perf_counter() - t0
-    return records
+    return records, perf
 
 
 def _chunk_batch(sub: Sequence[Tuple],
@@ -351,9 +526,10 @@ def _chunk_batch(sub: Sequence[Tuple],
     """Split one config group into engine-sized chunks: the stacked
     token plane (unique workloads × num_warps × longest stream; one
     slice per SM for multi-SM groups) stays under
-    ``_BATCH_TOKEN_BUDGET`` and chunks hold at most
+    :func:`batch_token_budget` and chunks hold at most
     ``_BATCH_MAX_CELLS`` cells. Cells arrive in grid order, so
     same-workload cells stay contiguous and padding stays tight."""
+    budget = batch_token_budget()
     sm_factor = gpu.num_sms if gpu is not None else 1
     chunks: List[List[Tuple]] = []
     cur: List[Tuple] = []
@@ -367,7 +543,7 @@ def _chunk_batch(sub: Sequence[Tuple],
                       max((len(k) for k, _ in wl.traces), default=1))
         est = len(new_uniq) * len(wl.traces) * new_len * 8 * sm_factor
         if cur and (len(cur) >= _BATCH_MAX_CELLS
-                    or est > _BATCH_TOKEN_BUDGET):
+                    or est > budget):
             chunks.append(cur)
             cur, uniq, max_len = [], set(), 1
             new_uniq = {wid}
@@ -382,11 +558,16 @@ def _chunk_batch(sub: Sequence[Tuple],
 
 def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
              json_path: Optional[str] = None,
-             engine: str = "auto") -> List[RunRecord]:
+             engine: str = "auto",
+             jobs: Optional[int] = None) -> List[RunRecord]:
     """Run every cell; see the module docstring for the three engines.
-    ``processes`` > 1 fans the process engine (and any cells the batched
-    engine cannot take) over a spawn pool. Records come back in grid
-    order regardless of execution order or engine."""
+    ``jobs`` (preferred name; ``processes`` is the legacy alias) sets
+    the parallelism: the batched engine fans chunks over that many
+    worker *threads* (the ctypes stepper releases the GIL), while the
+    process engine — and any cells the batched engine cannot take —
+    fans over a spawn pool of that many workers. Records come back in
+    grid order and bit-identical regardless of execution order, engine,
+    or worker count."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
     if engine == "jax":
@@ -394,19 +575,24 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
         if not jax_backend.available():
             raise RuntimeError("engine='jax' requested but "
                                + jax_backend.unavailable_reason())
+    if jobs is None:
+        jobs = processes
     cells = expand_grid(grid)
     records: List[Optional[RunRecord]] = [None] * len(cells)
     if engine != "process":
         batch_idx = [i for i, c in enumerate(cells) if _batchable(c)]
         if engine in ("batched", "jax") \
                 or len(batch_idx) >= AUTO_MIN_BATCH:
-            for i, rec in zip(batch_idx, _run_cells_batched(
-                    [cells[i] for i in batch_idx],
-                    backend="jax" if engine == "jax" else None)):
+            recs, perf = _run_cells_batched(
+                [cells[i] for i in batch_idx],
+                backend="jax" if engine == "jax" else None,
+                workers=batch_workers(jobs))
+            _TLS.batched_perf = perf
+            for i, rec in zip(batch_idx, recs):
                 records[i] = rec
     rest = [i for i in range(len(cells)) if records[i] is None]
     if rest:
-        nproc = min(processes or 1, len(rest))
+        nproc = min(jobs or 1, len(rest))
         if nproc > 1:
             ctx = multiprocessing.get_context("spawn")
             with ctx.Pool(nproc) as pool:
