@@ -1,6 +1,6 @@
 """Grid-throughput harness: batched lockstep engine (C / numpy /
 jitted-XLA steppers, serial and thread-parallel) vs the PR-2 spawn-pool
-path, written to ``BENCH_PR7.json`` at the repo root.
+path, written to ``BENCH_PR8.json`` at the repo root.
 
 Measures end-to-end ``run_grid`` wall time on two grids, interleaved
 best-of-N in one process (the container's absolute speed drifts ~2x
@@ -15,6 +15,16 @@ between sessions, so only same-run ratios are meaningful):
 * a 2-SM shared-L2 **multi-SM** grid (the paper's multi-programmed
   contention setup) — ``pool`` vs ``batched``, the configuration the
   engine could not batch before PR 5;
+* a **hyperparameter sweep** (`sweep` section) — a ≥1000-cell cutoff ×
+  throttle-epoch grid (256 detector configs over one shape class, each
+  cell horizon-bounded by ``max_cycles`` like an auto-tuner evaluation)
+  run through the batched C path two ways: ``shape`` (the PR-8 relaxed
+  grouping — one group per shape class, knobs as per-row config planes,
+  token planes memoized) vs ``legacy`` (``$REPRO_BATCH_GROUPING=exact``
+  + ``$REPRO_NO_TOKEN_MEMO=1``: one group per distinct ``SimConfig``
+  re-encoding its token planes, the pre-PR-8 behavior). Records are
+  asserted equal; the section reports cells/sec and group counts for
+  both, and ``--floor-sweep`` guards the ratio;
 * a **jobs scaling curve** for the C-path batched engine —
   ``batched_j2`` / ``batched_jN`` rerun the fig8 grid with the chunk
   scheduler fanned over 2 / ``os.cpu_count()`` worker threads (the
@@ -58,20 +68,21 @@ Usage::
 
     python -m benchmarks.bench_batched [--quick] [--repeats N]
                                        [--scale S] [--jobs N]
-                                       [--out BENCH_PR7.json]
+                                       [--out BENCH_PR8.json]
                                        [--floor-ratio R]
                                        [--floor-multism R]
                                        [--floor-jax R]
                                        [--floor-parallel R]
+                                       [--floor-sweep R]
 
 ``--floor-ratio R`` exits nonzero if the fig8 batched/pool throughput
 ratio falls below R — the CI guard against regressing the batched
 engine. ``--floor-multism`` guards the multi-SM ratio,
 ``--floor-jax`` the steady-state jax/pool ratio (keep it a sanity
-bound, e.g. 0.25 — see the note above), and ``--floor-parallel`` the
+bound, e.g. 0.25 — see the note above), ``--floor-parallel`` the
 2-worker thread-scaling speedup (auto-skipped when ``os.cpu_count()``
-< 2). Ratios, not absolute rates, so noisy runners do not flap the
-job.
+< 2), and ``--floor-sweep`` the sweep shape/legacy grouping ratio.
+Ratios, not absolute rates, so noisy runners do not flap the job.
 """
 from __future__ import annotations
 
@@ -85,7 +96,7 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import emit, header
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 FULL_SET = ("kmn", "bicg", "mvt", "kmeans",            # LWS
             "syrk", "gesummv", "syr2k", "ii",          # SWS
@@ -111,6 +122,38 @@ def _ms_grid(quick: bool, scale: float):
         policies=MS_QUICK_POLICIES if quick else POLICIES,
         workloads=MS_QUICK_SET if quick else QUICK_SET,
         scale=scale, gpu=GPUConfig(num_sms=2))
+
+
+SWEEP_WORKLOADS = ("kmn", "syrk", "nw", "bicg")
+SWEEP_POLICY = "ciao-c"
+SWEEP_MAX_CYCLES = 20_000
+
+
+def _sweep_grid(quick: bool, scale: float):
+    """Cutoff × throttle-epoch hyperparameter grid: one shape class,
+    every variant differing only in per-row knob fields. Each cell is
+    horizon-bounded (``max_cycles``) like an auto-tuner evaluation, so
+    the sweep measures the grouping/build overhead the per-row config
+    planes remove, not raw stepper throughput (fig8 covers that)."""
+    from repro.core.interference import DetectorConfig
+    from repro.core.runner import ExperimentGrid
+    from repro.core.simulator import SimConfig
+    n_cuts = 8 if quick else 32
+    epochs = (50, 200, 800, 3200) if quick \
+        else (25, 50, 100, 200, 400, 800, 1600, 3200)
+    variants = {}
+    for i in range(n_cuts):
+        cut = round(0.2 + 0.75 * i / (n_cuts - 1), 3)
+        for e in epochs:
+            variants[f"c{cut}-e{e}"] = SimConfig(
+                max_cycles=SWEEP_MAX_CYCLES,
+                detector=DetectorConfig(
+                    low_cutoff=cut,
+                    high_cutoff=min(cut + 0.2, 0.97),
+                    low_epoch=e, high_epoch=e * 20))
+    return ExperimentGrid(name="sweep", workloads=SWEEP_WORKLOADS,
+                          policies=(SWEEP_POLICY,), variants=variants,
+                          scale=scale)
 
 
 def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
@@ -175,6 +218,56 @@ def _measure(grid, runs, repeats: int, label: str,
     return out
 
 
+def _measure_sweep(grid, repeats: int, jobs: int) -> Dict:
+    """Interleaved A/B of the batched C path over the sweep grid:
+    ``shape`` (relaxed grouping + memoized token planes) vs ``legacy``
+    (per-``SimConfig`` grouping, planes re-encoded per group — the
+    pre-PR-8 path, restored via env knobs). Asserts record equality
+    between the legs before reporting."""
+    legs = {
+        "shape": {},
+        "legacy": {"REPRO_BATCH_GROUPING": "exact",
+                   "REPRO_NO_TOKEN_MEMO": "1"},
+    }
+    walls: Dict[str, List[float]] = {name: [] for name in legs}
+    groups: Dict[str, float] = {}
+    ref_records = None
+    for _ in range(repeats):
+        for name, env in legs.items():
+            prev = {k: os.environ.get(k) for k in env}
+            os.environ.update(env)
+            try:
+                r = _time_engine(grid, "batched", jobs)
+            finally:
+                for k, v in prev.items():
+                    if v is None:
+                        os.environ.pop(k, None)
+                    else:
+                        os.environ[k] = v
+            walls[name].append(r["wall_s"])
+            groups[name] = r["perf"].get("groups", 0.0)
+            if ref_records is None:
+                ref_records = r["records"]
+            elif r["records"] != ref_records:
+                raise RuntimeError(
+                    f"sweep: grouping leg {name!r} records diverge — "
+                    "per-row config planes broke bit-exactness")
+    n_cells = len(ref_records)
+    out: Dict = {"results": {}}
+    for name, ws in walls.items():
+        best = min(ws)
+        out["results"][name] = {
+            "wall_s": best, "cells_per_s": n_cells / best,
+            "all_walls_s": ws, "groups": groups[name],
+        }
+        emit(f"batched/sweep/{name}", 0.0,
+             f"{n_cells / best:.2f}cells/s;wall={best:.2f}s;"
+             f"groups={int(groups[name])}")
+    out["ratio"] = out["results"]["legacy"]["wall_s"] / \
+        out["results"]["shape"]["wall_s"]
+    return out
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -185,7 +278,7 @@ def main() -> int:
                     help="trace scale (default 0.5, quick 0.2)")
     ap.add_argument("--jobs", type=int, default=2,
                     help="spawn-pool workers for the baseline")
-    ap.add_argument("--out", default="BENCH_PR7.json")
+    ap.add_argument("--out", default="BENCH_PR8.json")
     ap.add_argument("--floor-ratio", type=float, default=0.0,
                     help="fail if fig8 batched/pool ratio is below")
     ap.add_argument("--floor-multism", type=float, default=0.0,
@@ -196,8 +289,13 @@ def main() -> int:
     ap.add_argument("--floor-parallel", type=float, default=0.0,
                     help="fail if the 2-worker batched speedup over "
                          "1 worker is below (skipped on 1-core hosts)")
+    ap.add_argument("--floor-sweep", type=float, default=0.0,
+                    help="fail if the sweep shape-grouping/legacy-"
+                         "grouping throughput ratio is below")
     ap.add_argument("--skip-parallel", action="store_true",
                     help="skip the jobs scaling curve")
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="skip the hyperparameter-sweep grouping A/B")
     ap.add_argument("--skip-numpy", action="store_true",
                     help="skip the pure-numpy stepper measurement")
     ap.add_argument("--skip-jax", action="store_true",
@@ -260,6 +358,18 @@ def main() -> int:
         runs.append(("batched_jax", "jax", "", 1))
     fig8 = _measure(grid, runs, repeats, "fig8", warm_walls)
 
+    sweep: Optional[Dict] = None
+    sweep_grid = None
+    if not args.skip_sweep:
+        sweep_grid = _sweep_grid(args.quick, scale)
+        sweep_cells = expand_grid(sweep_grid)
+        for cell in sweep_cells:
+            _cached_workload(cell.workload,
+                             workload_seed(cell.seed, cell.workload),
+                             cell.scale)
+        sweep = _measure_sweep(sweep_grid, repeats, 1)
+        sweep["cells"] = len(sweep_cells)
+
     ms: Optional[Dict] = None
     ms_grid = None
     if not args.skip_multism:
@@ -295,6 +405,26 @@ def main() -> int:
         "results": fig8["results"],
         "breakdown": fig8["breakdown"],
     }
+    if sweep is not None:
+        from repro.core.batched import config_shape_key
+        shape_classes = len({
+            config_shape_key(cfg, None)
+            for cfg in sweep_grid.variants.values()})
+        doc["sweep"] = {
+            "grid": "sweep", "cells": sweep["cells"],
+            "workloads": list(sweep_grid.workloads),
+            "policy": SWEEP_POLICY,
+            "configs": len(sweep_grid.variants),
+            "shape_classes": shape_classes,
+            "max_cycles": SWEEP_MAX_CYCLES,
+            "results": sweep["results"],
+            "ratio_shape_vs_legacy": sweep["ratio"],
+            "note": "shape = relaxed grouping (per-row config planes + "
+                    "memoized token planes); legacy = per-SimConfig "
+                    "grouping re-encoding planes per group "
+                    "(REPRO_BATCH_GROUPING=exact + "
+                    "REPRO_NO_TOKEN_MEMO=1). Records asserted equal.",
+        }
     if ms is not None:
         doc["multi_sm"] = {
             "grid": "fig8-2sm", "num_sms": 2,
@@ -336,6 +466,8 @@ def main() -> int:
         "jax_ratio_vs_pool": jax_ratio,
         "jax_compile_s": jax_r.get("compile_s") if jax_r else None,
         "multi_sm_ratio_vs_pool": ms_ratio,
+        "sweep_ratio_vs_legacy_grouping": (sweep["ratio"]
+                                           if sweep else None),
         "note": "ratio = best-of-N interleaved pool/batched wall time on "
                 "the same grid, records asserted equal; absolute "
                 "cells/sec drifts with the container. The jax leg is "
@@ -352,6 +484,11 @@ def main() -> int:
         emit("batched/ratio_jax", 0.0, f"{jax_ratio:.2f}x")
     if ms_ratio is not None:
         emit("batched/ratio_2sm", 0.0, f"{ms_ratio:.2f}x")
+    if sweep is not None:
+        emit("batched/ratio_sweep", 0.0,
+             f"{sweep['ratio']:.2f}x;groups="
+             f"{int(sweep['results']['shape']['groups'])}vs"
+             f"{int(sweep['results']['legacy']['groups'])}")
 
     out = pathlib.Path(args.out)
     out.write_text(json.dumps(doc, indent=1, sort_keys=True))
@@ -378,6 +515,15 @@ def main() -> int:
     elif args.floor_jax and jax_ratio is not None:
         emit("batched/floor_jax", 0.0,
              f"ok:{jax_ratio:.2f}x>={args.floor_jax:.2f}x")
+    if args.floor_sweep and sweep is not None:
+        if sweep["ratio"] < args.floor_sweep:
+            print(f"# FAIL: sweep shape/legacy grouping ratio "
+                  f"{sweep['ratio']:.2f}x below floor "
+                  f"{args.floor_sweep:.2f}x")
+            fail = True
+        else:
+            emit("batched/floor_sweep", 0.0,
+                 f"ok:{sweep['ratio']:.2f}x>={args.floor_sweep:.2f}x")
     if args.floor_parallel and speedup_at_2 is not None:
         if cpus < 2:
             # a second worker thread has no second core to land on:

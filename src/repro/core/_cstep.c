@@ -49,10 +49,13 @@ typedef struct {
     i64 l2nf, l2_sets, l2_ways;
     i64 nrb, dram_channels;
     i64 nw, list_entries, sat_max;
-    /* config scalars */
+    /* config scalars (shape-class constants) */
     i64 xor_hash, reuse_filter;
-    i64 lat_l1, lat_smem, lat_migrate, lat_l2, lat_dram, dram_gap;
-    i64 max_mlp, low_epoch, max_cycles, line_shift;
+    i64 max_mlp, line_shift;
+    /* per-row config planes: knobs that vary cell to cell within one
+     * shape class, indexed [b] like mem_of */
+    i64 *lat_l1, *lat_smem, *lat_migrate, *lat_l2, *lat_dram, *dram_gap;
+    i64 *low_epoch;
     /* per-warp planes (B x n [x ...]) */
     i64 *ready, *toks, *op_idx, *n_ops, *pend;
     i8 *done, *avail, *iso, *byp, *live, *runnable;
@@ -81,8 +84,9 @@ typedef struct {
     i64 *score_bump;
     i64 *pair_dense; /* B x (n+1) x n, row 0 = evictor==-1 guard */
     /* ---- in-stepper epoch / warp-done / timeline servicing ---- */
-    i64 high_epoch, aging_high, stride_ok, timeline_every, tl_cap;
-    double low_cutoff, high_cutoff;
+    i64 timeline_every, tl_cap;
+    i64 *high_epoch, *aging_high, *stride_ok;   /* per-row knobs */
+    double *low_cutoff, *high_cutoff;
     i8 *fam, *mode_p, *mode_t;          /* policy family / CIAO modes */
     i8 *allowed_pl, *isolated_pl, *bypass_pl;   /* policy mask planes */
     i8 *sp_bypass, *sp_base;            /* statPCAL mode + base set */
@@ -272,7 +276,7 @@ static void statp_tick_row(const Params *p, i64 b, i64 cycle)
         i64 den = p->dram_channels * cycle;
         if (den < 1)
             den = 1;
-        util = (double)(p->dram_requests[p->mem_of[b]] * p->dram_gap)
+        util = (double)(p->dram_requests[p->mem_of[b]] * p->dram_gap[b])
             / (double)den;
         if (util > 1.0)
             util = 1.0;
@@ -302,7 +306,7 @@ static int ciao_pop_ok(const Params *p, i64 b, i64 k, i64 act,
         return 1;
     const i64 *ih = (const i64 *)(uintptr_t)p->det_ptrs[b * 4 + 0];
     i64 hits = ih[k % p->nw];
-    return (double)(hits * act) <= p->low_cutoff * (double)inst;
+    return (double)(hits * act) <= p->low_cutoff[b] * (double)inst;
 }
 
 /* epoch-crossing poll + windowed IRS snapshots + aging
@@ -313,7 +317,7 @@ static void ciao_poll_row(const Params *p, i64 b, i64 act,
     const i64 nw = p->nw;
     i64 it = p->det_inst_total[b];
     const i64 *vh = (const i64 *)(uintptr_t)p->det_ptrs[b * 4 + 1];
-    i64 nlow = it / p->low_epoch;
+    i64 nlow = it / p->low_epoch[b];
     *lowp = nlow != p->low_idx[b];
     if (*lowp) {
         p->low_idx[b] = nlow;
@@ -330,7 +334,7 @@ static void ciao_poll_row(const Params *p, i64 b, i64 act,
         p->low_snap_act[b] = act;
         p->low_base_inst[b] = it;
     }
-    i64 nhigh = it / p->high_epoch;
+    i64 nhigh = it / p->high_epoch[b];
     *highp = nhigh != p->high_idx[b];
     if (*highp) {
         p->high_idx[b] = nhigh;
@@ -347,7 +351,8 @@ static void ciao_poll_row(const Params *p, i64 b, i64 act,
         p->high_snap_act[b] = act;
         p->high_base_inst[b] = it;
         p->high_crossings[b] += 1;
-        if (p->aging_high && p->high_crossings[b] % p->aging_high == 0) {
+        if (p->aging_high[b] &&
+                p->high_crossings[b] % p->aging_high[b] == 0) {
             p->det_irs_inst[b] /= 2;
             i64 *ih = (i64 *)(uintptr_t)p->det_ptrs[b * 4 + 0];
             for (i64 w = 0; w < nw; w++)
@@ -424,7 +429,7 @@ static void ciao_high_row(const Params *p, i64 b)
     for (i64 r = 0; r < na; r++) {
         i64 i = scored[r];
         i64 h = hits[i % nw];
-        if (!((double)(h * act) > p->high_cutoff * (double)win))
+        if (!((double)(h * act) > p->high_cutoff[b] * (double)win))
             break; /* sorted descending: nothing further exceeds */
         i64 j = interf[i % le];
         if (j == -1 || j == i || done[j])
@@ -482,10 +487,13 @@ static int service_epoch(const Params *p, i64 b, int anchor, i64 cycle,
     p->irs_off[b] = li - p->det_irs_inst[b]; /* aging moves it */
     refresh_row(p, b);
     if (anchor) {
-        i64 nxt = (li / p->low_epoch + 1) * p->low_epoch;
-        if (p->stride_ok && fam == F_CIAO
-                && p->stall_len[b] + p->iso_len[b] == 0)
-            nxt = (li / p->high_epoch + 1) * p->high_epoch;
+        i64 lo = p->low_epoch[b];
+        i64 nxt = (li / lo + 1) * lo;
+        if (p->stride_ok[b] && fam == F_CIAO
+                && p->stall_len[b] + p->iso_len[b] == 0) {
+            i64 hi = p->high_epoch[b];
+            nxt = (li / hi + 1) * hi;
+        }
         p->next_epoch[b] = nxt;
     }
     return 1;
@@ -591,6 +599,11 @@ static void run_cell(const Params *p, i64 b)
     i64 tick = p->tick[b], l2_tick = p->l2_tick[m];
     i64 rb = p->region_blocks[b];
     const i64 until = p->until[b];
+    /* this row's config-plane knobs, hoisted out of the hot loop */
+    const i64 lat_l1 = p->lat_l1[b], lat_smem = p->lat_smem[b];
+    const i64 lat_migrate = p->lat_migrate[b], lat_l2 = p->lat_l2[b];
+    const i64 lat_dram = p->lat_dram[b], dram_gap = p->dram_gap[b];
+    const i64 low_epoch = p->low_epoch[b];
     i64 flags = 0;
 
     for (;;) {
@@ -623,8 +636,8 @@ static void run_cell(const Params *p, i64 b)
                      * (no re-anchor of next_epoch, like the scalar
                      * loop), then retry selection; the slice check
                      * above bounds the stretch */
-                    cycle += p->low_epoch;
-                    li += p->low_epoch;
+                    cycle += low_epoch;
+                    li += low_epoch;
                     service_epoch(p, b, 0, cycle, li);
                     continue;
                 }
@@ -658,7 +671,7 @@ static void run_cell(const Params *p, i64 b)
                     i64 old = smem_tags[idx];
                     if (old == line) {
                         p->cnt_smem_hit[b] += 1;
-                        lat = p->lat_smem;
+                        lat = lat_smem;
                     } else {
                         if (old >= 0) {
                             p->cnt_smem_evictions[b] += 1;
@@ -677,7 +690,7 @@ static void run_cell(const Params *p, i64 b)
                             l1_tags[f] = -1;
                             l1_owners[f] = -1;
                             p->cnt_smem_migrate[b] += 1;
-                            lat = p->lat_migrate;
+                            lat = lat_migrate;
                         } else {
                             p->cnt_smem_miss[b] += 1;
                         }
@@ -694,7 +707,7 @@ static void run_cell(const Params *p, i64 b)
                     p->cnt_l1_hit[b] += 1;
                     l1_reused[f] = 1;
                     l1_stamp[f] = tick++;
-                    lat = p->lat_l1;
+                    lat = lat_l1;
                 } else { /* miss: probe VTA, fill with stamp-LRU victim */
                     p->cnt_l1_miss[b] += 1;
                     if (vta_probe(p, b, wid, line))
@@ -727,7 +740,7 @@ static void run_cell(const Params *p, i64 b)
                     if (l2_tags[g] == line) { f2 = g; break; }
                 if (f2 >= 0) { /* L2 hit */
                     p->l2_hits[b] += 1;
-                    lat = p->lat_l2;
+                    lat = lat_l2;
                 } else { /* L2 miss -> DRAM channel queue */
                     f2 = base2;
                     i64 bs = l2_stamp[base2];
@@ -741,10 +754,10 @@ static void run_cell(const Params *p, i64 b)
                     i64 ch = (line >> 2) % p->dram_channels;
                     i64 start = cycle > dram_free[ch] ? cycle
                                                       : dram_free[ch];
-                    dram_free[ch] = start + p->dram_gap;
+                    dram_free[ch] = start + dram_gap;
                     p->dram_requests[m] += 1;
                     p->cnt_dram_reqs[b] += 1;
-                    lat = p->lat_dram + start - cycle;
+                    lat = lat_dram + start - cycle;
                 }
                 l2_stamp[f2] = l2_tick++;
             }

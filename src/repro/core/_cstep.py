@@ -24,6 +24,8 @@ import tempfile
 import threading
 from typing import Optional
 
+import numpy as np
+
 _c_i64 = ctypes.c_longlong
 _c_f64 = ctypes.c_double
 _p_i64 = ctypes.POINTER(ctypes.c_longlong)
@@ -41,12 +43,13 @@ class Params(ctypes.Structure):
         ("l2nf", _c_i64), ("l2_sets", _c_i64), ("l2_ways", _c_i64),
         ("nrb", _c_i64), ("dram_channels", _c_i64),
         ("nw", _c_i64), ("list_entries", _c_i64), ("sat_max", _c_i64),
-        # config scalars
+        # config scalars (shape-class constants)
         ("xor_hash", _c_i64), ("reuse_filter", _c_i64),
-        ("lat_l1", _c_i64), ("lat_smem", _c_i64), ("lat_migrate", _c_i64),
-        ("lat_l2", _c_i64), ("lat_dram", _c_i64), ("dram_gap", _c_i64),
-        ("max_mlp", _c_i64), ("low_epoch", _c_i64),
-        ("max_cycles", _c_i64), ("line_shift", _c_i64),
+        ("max_mlp", _c_i64), ("line_shift", _c_i64),
+        # per-row config planes (knobs varying within a shape class)
+        ("lat_l1", _p_i64), ("lat_smem", _p_i64), ("lat_migrate", _p_i64),
+        ("lat_l2", _p_i64), ("lat_dram", _p_i64), ("dram_gap", _p_i64),
+        ("low_epoch", _p_i64),
         # per-warp planes
         ("ready", _p_i64), ("toks", _p_i64), ("op_idx", _p_i64),
         ("n_ops", _p_i64), ("pend", _p_i64),
@@ -80,10 +83,10 @@ class Params(ctypes.Structure):
         ("det_ptrs", _p_u64), ("score_ptrs", _p_u64),
         ("score_bump", _p_i64), ("pair_dense", _p_i64),
         # in-stepper epoch / warp-done / timeline servicing
-        ("high_epoch", _c_i64), ("aging_high", _c_i64),
-        ("stride_ok", _c_i64), ("timeline_every", _c_i64),
-        ("tl_cap", _c_i64),
-        ("low_cutoff", _c_f64), ("high_cutoff", _c_f64),
+        ("timeline_every", _c_i64), ("tl_cap", _c_i64),
+        ("high_epoch", _p_i64), ("aging_high", _p_i64),
+        ("stride_ok", _p_i64),
+        ("low_cutoff", _p_f64), ("high_cutoff", _p_f64),
         ("fam", _p_i8), ("mode_p", _p_i8), ("mode_t", _p_i8),
         ("allowed_pl", _p_i8), ("isolated_pl", _p_i8),
         ("bypass_pl", _p_i8),
@@ -209,13 +212,13 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
     p.nw, p.list_entries, p.sat_max = eng.nw, eng.list_entries, eng.sat_max
     p.xor_hash = int(eng.xor_hash)
     p.reuse_filter = int(eng.reuse_filter)
-    cfg = eng.cfg
+    p.max_mlp = eng.max_mlp
+    # per-row config planes (heterogeneous knobs within a shape class)
     p.lat_l1, p.lat_smem, p.lat_migrate = \
-        cfg.lat_l1, cfg.lat_smem, cfg.lat_migrate
+        _i64(eng.lat_l1), _i64(eng.lat_smem), _i64(eng.lat_migrate)
     p.lat_l2, p.lat_dram, p.dram_gap = \
-        cfg.lat_l2, cfg.lat_dram, cfg.dram_gap
-    p.max_mlp, p.low_epoch = eng.max_mlp, eng.low_epoch
-    p.max_cycles = eng.max_cycles
+        _i64(eng.lat_l2), _i64(eng.lat_dram), _i64(eng.dram_gap)
+    p.low_epoch = _i64(eng.low_epoch)
     from repro.workloads.tokens import TOKEN_LINE_SHIFT
     p.line_shift = TOKEN_LINE_SHIFT
     p.ready, p.toks = _i64(eng.ready), _i64(eng.toks)
@@ -256,15 +259,16 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
     p.score_ptrs = score_ptrs.ctypes.data_as(_p_u64)
     p.score_bump = _i64(bumps)
     p.pair_dense = _i64(eng.pair_dense)
-    # in-stepper epoch / warp-done / timeline servicing
-    dcfg = cfg.detector
-    p.high_epoch = eng.high_epoch
-    p.aging_high = dcfg.aging_high_epochs
-    p.stride_ok = int(eng._stride_ok)
+    # in-stepper epoch / warp-done / timeline servicing; the detector
+    # knob columns live in the engine's DetPlanes (per-row planes)
+    p.high_epoch = _i64(eng.high_epoch)
+    p.aging_high = _i64(eng.det_pl.aging_high)
+    stride_i64 = eng._stride_ok.astype(np.int64)
+    p.stride_ok = _i64(stride_i64)
     p.timeline_every = eng.timeline_every
     p.tl_cap = eng.tl_cap
-    p.low_cutoff = dcfg.low_cutoff
-    p.high_cutoff = dcfg.high_cutoff
+    p.low_cutoff = _f64(eng.det_pl.low_cutoff)
+    p.high_cutoff = _f64(eng.det_pl.high_cutoff)
     p.fam = _i8(eng.fam)
     p.mode_p, p.mode_t = _i8(eng.mode_p), _i8(eng.mode_t)
     p.allowed_pl = _i8(eng.allowed_pl)
@@ -301,7 +305,7 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
     p.tl_last_instr = _i64(eng.last_instr)
     p.tl_last_cycle = _i64(eng.last_cycle)
     p.tl_dipc = _f64(eng.tl_dipc)
-    p._keep = (det_ptrs, score_ptrs, bumps, eng)
+    p._keep = (det_ptrs, score_ptrs, bumps, stride_i64, eng)
     return p
 
 

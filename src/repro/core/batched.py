@@ -65,6 +65,7 @@ those.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -118,14 +119,34 @@ def supports_config(cfg: SimConfig, gpu: Optional[GPUConfig] = None) -> bool:
     return cfg.l2_bank_gap == 0 and not cfg.onchip.mshr_gate
 
 
+def config_shape_key(cfg: SimConfig,
+                     gpu: Optional[GPUConfig] = None) -> tuple:
+    """The plane-shape-affecting fields of a config. Cells whose configs
+    agree on this key batch together: the remaining scalar knobs
+    (latencies, DRAM gap, epoch lengths, cutoffs, aging period, cycle
+    cap) ride in per-row config planes, so a cutoff x throttle-depth
+    sweep is ONE batch per shape class. The runner groups on this key.
+    """
+    d = cfg.detector
+    return (cfg.num_warps, cfg.dep_every, cfg.max_mlp,
+            cfg.dram_channels, cfg.l2_bytes, cfg.l2_ways,
+            cfg.l2_banks, cfg.l2_bank_gap, repr(cfg.onchip),
+            d.num_warps, d.list_entries, d.vta_sets,
+            d.vta_tags_per_set, d.sat_max,
+            repr(gpu) if gpu is not None else None)
+
+
 @dataclasses.dataclass
 class BatchCell:
-    """One grid cell: a workload under one policy. The config (and GPU
-    shape, if any) is shared by the whole batch (homogeneous-group
-    contract)."""
+    """One grid cell: a workload under one policy. ``cfg`` optionally
+    carries a per-cell :class:`SimConfig` whose scalar *knob* fields
+    (latencies, epoch lengths, cutoffs, cycle cap) may differ from the
+    rest of the batch; shape-affecting fields must agree batch-wide
+    (:func:`config_shape_key`). ``cfg=None`` uses the engine's config."""
     workload: Any
     policy: str
     policy_kwargs: Optional[dict] = None
+    cfg: Optional[SimConfig] = None
 
 
 class BatchedSMEngine:
@@ -144,20 +165,33 @@ class BatchedSMEngine:
                  cfg: Optional[SimConfig] = None,
                  backend: str = "auto",
                  gpu: Optional[GPUConfig] = None):
-        self.cfg = cfg = cfg if cfg is not None else SimConfig()
-        if not supports_config(cfg, gpu):
-            raise ValueError(
-                "config not supported by the batched engine "
-                "(l2_bank_gap != 0 or mshr_gate); use SMSimulator")
+        self.cells = list(cells)
+        if not self.cells:
+            raise ValueError("empty batch")
+        base = cfg if cfg is not None else SimConfig()
+        # per-cell configs: knob fields vary row-wise, shape fields must
+        # agree (the runner groups on config_shape_key before building)
+        self.cell_cfgs = [c.cfg if c.cfg is not None else base
+                          for c in self.cells]
+        self.cfg = cfg = self.cell_cfgs[0]
+        key0 = config_shape_key(cfg, gpu)
+        for other in self.cell_cfgs[1:]:
+            if config_shape_key(other, gpu) != key0:
+                raise ValueError(
+                    "heterogeneous batch: cells disagree on "
+                    "shape-affecting config fields; group by "
+                    "config_shape_key first")
+        for ccfg in self.cell_cfgs:
+            if not supports_config(ccfg, gpu):
+                raise ValueError(
+                    "config not supported by the batched engine "
+                    "(l2_bank_gap != 0 or mshr_gate); use SMSimulator")
         if backend not in ("auto", "numpy", "c", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         self._backend_req = backend
-        self.cells = list(cells)
         self.gpu = gpu
         self.S = gpu.num_sms if gpu is not None else 1
         self.n_cells = len(self.cells)
-        if not self.n_cells:
-            raise ValueError("empty batch")
         self.B = self.n_cells * self.S        # rows
         # time-breakdown accumulators (seconds); stepper and drain are
         # disjoint for both the C and numpy paths (each round is a
@@ -190,10 +224,7 @@ class BatchedSMEngine:
         oc = cfg.onchip
         dcfg = cfg.detector
         self.n_warps = n = cfg.num_warps
-        self.low_epoch = dcfg.low_epoch
-        self.high_epoch = dcfg.high_epoch
         self.max_mlp = cfg.max_mlp
-        self.max_cycles = cfg.max_cycles
         self.l1_sets, self.l1_ways = oc.num_sets, oc.ways
         self.xor_hash, self.reuse_filter = oc.xor_hash, oc.reuse_filter
         self.v_sets, self.v_k = dcfg.vta_sets, dcfg.vta_tags_per_set
@@ -203,7 +234,6 @@ class BatchedSMEngine:
         # set; zero channels still means one)
         self.l2_sets = max(cfg.l2_bytes // (LINE * cfg.l2_ways), 1)
         self.l2_ways = cfg.l2_ways
-        self.dram_gap = cfg.dram_gap
         self.dram_channels = max(cfg.dram_channels, 1)
         nf = self.l1_sets * self.l1_ways
         vnf = self.v_sets * self.v_k
@@ -221,6 +251,24 @@ class BatchedSMEngine:
         self._phase_rows = [np.flatnonzero(self.sm_of == k)
                             for k in range(S)]
 
+        # per-row config planes: the scalar knobs that may differ cell
+        # to cell inside one shape class, expanded cell -> rows (rows of
+        # a multi-SM cell share their cell's config). The detector knobs
+        # (cutoffs, epochs, aging) live in det_pl and arrive through
+        # adopt_row from each cell's own DetectorConfig.
+        def _knob(get):
+            vals = np.asarray([get(c) for c in self.cell_cfgs], i64)
+            return vals[self.cell_of]
+        self.lat_l1 = _knob(lambda c: c.lat_l1)
+        self.lat_smem = _knob(lambda c: c.lat_smem)
+        self.lat_migrate = _knob(lambda c: c.lat_migrate)
+        self.lat_l2 = _knob(lambda c: c.lat_l2)
+        self.lat_dram = _knob(lambda c: c.lat_dram)
+        self.dram_gap = _knob(lambda c: c.dram_gap)
+        self.max_cycles = _knob(lambda c: c.max_cycles)
+        self.low_epoch = _knob(lambda c: c.detector.low_epoch)
+        self.high_epoch = _knob(lambda c: c.detector.high_epoch)
+
         # per-row objects: the decision logic lives in the shared epoch
         # planes; the objects are row views over them (adopt_* below)
         self.dets: List[InterferenceDetector] = []
@@ -228,6 +276,7 @@ class BatchedSMEngine:
         self.n_of = np.zeros(B, i64)
         self.region_blocks = np.zeros(B, i64)
         streams_per_row: List[List[List[int]]] = []
+        tot_per_u: List[int] = []
         uniq: Dict[Tuple[int, int], int] = {}   # (id(wl), sm) -> u index
         self.u_of = np.zeros(B, i64)
         row_wls = self._row_workloads()
@@ -235,7 +284,8 @@ class BatchedSMEngine:
         for b in range(B):
             wl = row_wls[b]
             cell = self.cells[int(self.cell_of[b])]
-            det = InterferenceDetector(dcfg)
+            det = InterferenceDetector(
+                self.cell_cfgs[int(self.cell_of[b])].detector)
             self.dets.append(det)
             self.policies.append(make_policy(
                 cell.policy, n, det, **(cell.policy_kwargs or {})))
@@ -254,8 +304,29 @@ class BatchedSMEngine:
             u = uniq.get(key)
             if u is None:
                 u = uniq[key] = len(streams_per_row)
-                streams_per_row.append(_tokens.encode_workload(
-                    wl.traces, cfg.dep_every, n))
+                # memoized on the workload object: a sweep that chunks
+                # one workload into many engine builds encodes its token
+                # streams once, not once per chunk (workloads come out
+                # of the runner's cache, so the object is shared)
+                # $REPRO_NO_TOKEN_MEMO=1 restores the per-build encode
+                # (the pre-plane behavior, kept for bench A/B)
+                use_memo = not os.environ.get("REPRO_NO_TOKEN_MEMO")
+                mkey = (cfg.dep_every, n)
+                memo = (getattr(wl, "_token_enc", None)
+                        if use_memo else None)
+                if memo is None or memo[0] != mkey:
+                    enc = _tokens.encode_workload(
+                        wl.traces, cfg.dep_every, n)
+                    tot = sum((-t if t < 0 else 1)
+                              for w in enc for t in w)
+                    memo = (mkey, enc, tot)
+                    if use_memo:
+                        try:
+                            wl._token_enc = memo
+                        except (AttributeError, TypeError):
+                            pass           # slotted/frozen workloads
+                streams_per_row.append(memo[1])
+                tot_per_u.append(memo[2])
             self.u_of[b] = u
         # token streams stacked once per distinct (workload, SM) slice
         # (rows of the same slice share planes through u_of)
@@ -266,8 +337,7 @@ class BatchedSMEngine:
         # exact per-row instruction total (ALU tokens retire |tok|, mem
         # tokens 1): bounds the timeline sample count, so the sample
         # arrays can be preallocated once and shared with the C stepper
-        tot_u = np.asarray([sum((-t if t < 0 else 1) for w in s for t in w)
-                            for s in streams_per_row], i64)
+        tot_u = np.asarray(tot_per_u, i64)
         self.total_instr = tot_u[self.u_of]
 
         nrb = max(int(self.region_blocks.max()), 1)
@@ -327,7 +397,7 @@ class BatchedSMEngine:
         # rows become runnable only inside their SM phase (_run_sliced);
         # after every phase the set drains back to all-False
         self.runnable = np.zeros(B, b8)
-        self.until = np.full(B, self.max_cycles, i64)
+        self.until = self.max_cycles.copy()
         self.nf, self.vnf, self.l2nf = nf, vnf, l2nf
 
         # ---- epoch planes: detector + policy state, adopted row-wise ----
@@ -400,8 +470,9 @@ class BatchedSMEngine:
 
         # next-trigger table: passive cells never pause for epochs; CIAO
         # cells with empty stacks skip straight to the high boundary
-        self._stride_ok = (self.high_epoch % self.low_epoch == 0
-                           and self.high_epoch > self.low_epoch)
+        # (per row — heterogeneous epoch lengths stride independently)
+        self._stride_ok = ((self.high_epoch % self.low_epoch == 0)
+                           & (self.high_epoch > self.low_epoch))
         self.next_epoch = np.where(
             self.fam == F_PASSIVE, _HUGE,
             np.where((self.fam == F_CIAO) & self._stride_ok,
@@ -499,8 +570,8 @@ class BatchedSMEngine:
         cyc = int(self.cycle[b])
         if cyc <= 0:
             return 0.0
-        util = int(self.dram_requests[self.mem_of[b]]) * self.dram_gap / \
-            (self.dram_channels * cyc)
+        util = int(self.dram_requests[self.mem_of[b]]) \
+            * int(self.dram_gap[b]) / (self.dram_channels * cyc)
         return 1.0 if util > 1.0 else util
 
     def _util_vec(self, idx: np.ndarray) -> np.ndarray:
@@ -510,7 +581,7 @@ class BatchedSMEngine:
         cyc = self.cycle[idx]
         reqs = self.dram_requests[self.mem_of[idx]]
         util = np.where(cyc > 0,
-                        reqs * self.dram_gap
+                        reqs * self.dram_gap[idx]
                         / np.maximum(self.dram_channels * cyc, 1), 0.0)
         return np.minimum(util, 1.0)
 
@@ -572,15 +643,13 @@ class BatchedSMEngine:
         self.byp[idx] = self.bypass_pl[idx]
         a = idx[anchor]
         if a.size:
-            nxt = (li[a] // self.low_epoch + 1) * self.low_epoch
-            if self._stride_ok:
-                skip = (self.fam[a] == F_CIAO) & \
-                    ((self.stall_len[a] + self.iso_len[a]) == 0)
-                if skip.any():
-                    nxt = np.where(
-                        skip,
-                        (li[a] // self.high_epoch + 1) * self.high_epoch,
-                        nxt)
+            lo = self.low_epoch[a]
+            nxt = (li[a] // lo + 1) * lo
+            skip = self._stride_ok[a] & (self.fam[a] == F_CIAO) & \
+                ((self.stall_len[a] + self.iso_len[a]) == 0)
+            if skip.any():
+                hi = self.high_epoch[a]
+                nxt = np.where(skip, (li[a] // hi + 1) * hi, nxt)
             self.next_epoch[a] = nxt
 
     def _epoch_object(self, b: int) -> None:
@@ -652,7 +721,7 @@ class BatchedSMEngine:
         """Rows that reached their slice boundary stop for this phase;
         a boundary at the cycle cap ends the row for good."""
         self.runnable[rows] = False
-        for b in rows[self.until[rows] >= self.max_cycles]:
+        for b in rows[self.until[rows] >= self.max_cycles[rows]]:
             self._finalize(int(b))
 
     def _vta_probe_pop(self, b: int, wid: int, line: int) -> None:
@@ -793,18 +862,19 @@ class BatchedSMEngine:
         ``GPUSimulator.run``'s interleaving. Single-SM batches are the
         degenerate S=1, slice=max_cycles case (one phase to completion).
         """
+        cap = int(self.max_cycles.max())
         slice_cycles = self.gpu.slice_cycles if self.gpu is not None \
-            else self.max_cycles
+            else cap
         perf = self.perf
         t = 0
-        while t < self.max_cycles and self.live.any():
+        while t < cap and self.live.any():
             t += slice_cycles
-            until = min(t, self.max_cycles)
+            until = np.minimum(t, self.max_cycles)
             for rows in self._phase_rows:
                 alive = rows[self.live[rows]]
                 if not alive.size:
                     continue
-                self.until[alive] = until
+                self.until[alive] = until[alive]
                 self.runnable[alive] = True
                 t0 = time.perf_counter()
                 round_fn()
@@ -861,8 +931,8 @@ class BatchedSMEngine:
         if thr.size:
             # everything throttled: advance to let epochs fire. Note the
             # scalar loop does NOT re-anchor next_epoch here.
-            self.cycle[thr] += self.low_epoch
-            self.li[thr] += self.low_epoch
+            self.cycle[thr] += self.low_epoch[thr]
+            self.li[thr] += self.low_epoch[thr]
         wd = idx[(flags & P_WARPDONE) != 0]
         if wd.size:
             # the stepper already flipped done/avail/last_wid
@@ -970,8 +1040,8 @@ class BatchedSMEngine:
                     # low_epoch advances and pausing each one would
                     # stall the row for a whole round per advance
                     ti = np.flatnonzero(thr)
-                    cycle[ti] += self.low_epoch
-                    self.li[ti] += self.low_epoch
+                    cycle[ti] += self.low_epoch[ti]
+                    self.li[ti] += self.low_epoch[ti]
                     t0 = time.perf_counter()
                     self._epoch_batch(ti, np.zeros(len(ti), bool))
                     dt = time.perf_counter() - t0
@@ -1066,7 +1136,6 @@ class BatchedSMEngine:
         hierarchy plane (multi-SM cells) never collide because only one
         SM phase is runnable at a time, and within the subset the target
         slots are distinct."""
-        cfg = self.cfg
         line = tok >> _SHIFT
         bypm = mem & self._byp_f[rw]
         isom = mem & self._iso_f[rw] & ~bypm
@@ -1097,7 +1166,7 @@ class BatchedSMEngine:
         if hit.any():
             reused_f[f_hit] = reused_f[f_hit] | hit
             stamp_f[f_hit] = np.where(hit, self.tick, stamp_f[f_hit])
-            lat = np.where(hit, cfg.lat_l1, lat)
+            lat = np.where(hit, self.lat_l1, lat)
 
         # ---- CIAO-P smem region: evictions first (they insert into the
         # VTA before the probe, unlike the L1 fill which inserts after) --
@@ -1113,7 +1182,7 @@ class BatchedSMEngine:
             sold = st_f[sflat]
             shit = iso2 & (sold == line)
             self.cnt_smem_hit += shit
-            lat = np.where(shit, cfg.lat_smem, lat)
+            lat = np.where(shit, self.lat_smem, lat)
             smiss = iso2 & ~shit
             if smiss.any():
                 sevict = smiss & (sold >= 0)
@@ -1162,7 +1231,7 @@ class BatchedSMEngine:
                 tags_f[f_hit] = np.where(mig, -1, tags_f[f_hit])
                 owners_f[f_hit] = np.where(mig, -1, owners_f[f_hit])
                 self.cnt_smem_migrate += mig
-                lat = np.where(mig, cfg.lat_migrate, lat)
+                lat = np.where(mig, self.lat_migrate, lat)
             smiss2 = smiss & ~mig
             self.cnt_smem_miss += smiss2
             post |= smiss2
@@ -1181,7 +1250,7 @@ class BatchedSMEngine:
             h2 = post & l2res
             m2 = post & ~l2res
             self.l2_hits += h2
-            lat = np.where(h2, cfg.lat_l2, lat)
+            lat = np.where(h2, self.lat_l2, lat)
             f2 = b2 + eq2.argmax(1)
             if m2.any():
                 vic2 = b2 + st2_f[wi2].argmin(1)
@@ -1192,10 +1261,10 @@ class BatchedSMEngine:
                 df_f = self._dram_free_f
                 free = df_f[chm]
                 start = np.maximum(cycle[m2], free)
-                df_f[chm] = start + self.dram_gap
+                df_f[chm] = start + self.dram_gap[m2]
                 self.dram_requests[self.mem_of[m2]] += 1
                 self.cnt_dram_reqs += m2
-                lat[m2] = cfg.lat_dram + start - cycle[m2]
+                lat[m2] = self.lat_dram[m2] + start - cycle[m2]
                 f2 = np.where(m2, vic2, f2)
             fp = f2[post]
             st2_f[fp] = self.l2_tick[self.mem_of[post]]

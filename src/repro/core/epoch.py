@@ -92,6 +92,13 @@ class DetPlanes:
     interfering: np.ndarray          # (B, list_entries) i64
     sat: np.ndarray                  # (B, list_entries) i64
     pair_list: np.ndarray            # (B, list_entries, 2) i64
+    # per-row config planes: scalar detector knobs promoted to columns
+    # so heterogeneous sweeps batch (shape-affecting fields stay on cfg)
+    low_epoch: np.ndarray            # (B,) i64
+    high_epoch: np.ndarray           # (B,) i64
+    aging_high: np.ndarray           # (B,) i64  0 disables aging
+    low_cutoff: np.ndarray           # (B,) f64
+    high_cutoff: np.ndarray          # (B,) f64
     wid_sets: np.ndarray             # (nw,) i64  wid -> vta set index
 
     @classmethod
@@ -120,6 +127,11 @@ class DetPlanes:
             interfering=np.full((b, le), NO_WARP, i64),
             sat=np.zeros((b, le), i64),
             pair_list=np.full((b, le, 2), NO_WARP, i64),
+            low_epoch=np.full(b, cfg.low_epoch, i64),
+            high_epoch=np.full(b, cfg.high_epoch, i64),
+            aging_high=np.full(b, cfg.aging_high_epochs, i64),
+            low_cutoff=np.full(b, cfg.low_cutoff, np.float64),
+            high_cutoff=np.full(b, cfg.high_cutoff, np.float64),
             wid_sets=np.arange(nw, dtype=i64) % cfg.vta_sets,
         )
 
@@ -128,7 +140,9 @@ class DetPlanes:
                    "irs_hits", "low_base_hits", "high_base_hits",
                    "low_snap_hits", "high_snap_hits", "low_snap_win",
                    "high_snap_win", "low_snap_act", "high_snap_act",
-                   "vta_hits", "interfering", "sat", "pair_list")
+                   "vta_hits", "interfering", "sat", "pair_list",
+                   "low_epoch", "high_epoch", "aging_high",
+                   "low_cutoff", "high_cutoff")
 
     def row(self, b: int) -> "DetPlanes":
         """A batch-of-1 *view* of row ``b`` (shares memory)."""
@@ -153,10 +167,9 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
     windowed IRS snapshots at crossings, counter aging every
     ``aging_high_epochs`` high crossings.
     """
-    cfg = pl.cfg
     act = np.maximum(np.asarray(active, np.int64), 1)
     it = pl.inst_total[idx]
-    nlow = it // cfg.low_epoch
+    nlow = it // pl.low_epoch[idx]
     low = nlow != pl.low_idx[idx]
     if low.any():
         sub = idx[low]
@@ -168,7 +181,7 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
         pl.low_snap_act[sub] = act[low]
         pl.low_base_hits[sub] = cur
         pl.low_base_inst[sub] = it[low]
-    nhigh = it // cfg.high_epoch
+    nhigh = it // pl.high_epoch[idx]
     high = nhigh != pl.high_idx[idx]
     if high.any():
         sub = idx[high]
@@ -181,12 +194,13 @@ def poll_epochs(pl: DetPlanes, idx: np.ndarray, active: np.ndarray
         pl.high_base_hits[sub] = cur
         pl.high_base_inst[sub] = it[high]
         pl.high_crossings[sub] += 1
-        if cfg.aging_high_epochs:
-            aged = sub[pl.high_crossings[sub]
-                       % cfg.aging_high_epochs == 0]
-            if len(aged):
-                pl.irs_inst[aged] //= 2
-                pl.irs_hits[aged] //= 2
+        ag = pl.aging_high[sub]
+        aged = sub[(ag > 0)
+                   & (pl.high_crossings[sub]
+                      % np.where(ag > 0, ag, 1) == 0)]
+        if len(aged):
+            pl.irs_inst[aged] //= 2
+            pl.irs_hits[aged] //= 2
     return low, high
 
 
@@ -306,7 +320,7 @@ def ciao_low_tick(pl: DetPlanes, stall: np.ndarray, stall_len: np.ndarray,
     k = pl.pair_list[idx, topc % le, 1]
     kc = np.where(k >= 0, k, 0)
     pop = has & ((k == NO_WARP) | fin[idx, kc]
-                 | irs_cum_leq(pl, idx, kc, act, cfg.low_cutoff))
+                 | irs_cum_leq(pl, idx, kc, act, pl.low_cutoff[idx]))
     if pop.any():
         sub = idx[pop]
         w = stall[sub, stall_len[sub] - 1]
@@ -325,7 +339,7 @@ def ciao_low_tick(pl: DetPlanes, stall: np.ndarray, stall_len: np.ndarray,
     k2 = pl.pair_list[idx, tic % le, 0]
     k2c = np.where(k2 >= 0, k2, 0)
     pop2 = ok & ((k2 == NO_WARP) | fin[idx, k2c]
-                 | irs_cum_leq(pl, idx, k2c, act, cfg.low_cutoff))
+                 | irs_cum_leq(pl, idx, k2c, act, pl.low_cutoff[idx]))
     if pop2.any():
         sub = idx[pop2]
         w = iso[sub, iso_len[sub] - 1]
@@ -365,7 +379,8 @@ def ciao_high_tick(pl: DetPlanes, stall: np.ndarray,
     hits = pl.high_snap_hits[idx][:, np.arange(n) % nw]
     # `snap > cutoff` gate; the scalar walk's sorted-order break at the
     # first snap <= cutoff equals dropping every non-exceeding warp
-    cand = alive & snap_over(hits, win, act, cfg.high_cutoff) \
+    cand = alive & snap_over(hits, win, act,
+                             pl.high_cutoff[idx][:, None]) \
         & (np.count_nonzero(alive, axis=1) > 1)[:, None]
     order = np.argsort(np.where(cand, -hits, _DEAD_KEY), axis=1,
                        kind="stable")          # (k, n) warp ids, desc IRS

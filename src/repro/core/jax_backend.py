@@ -31,7 +31,11 @@ those need per-cell Python). :func:`supports_engine` is the predicate;
 hold, and ``runner.run_grid(engine="jax")`` routes only eligible cells
 here (the rest fall back to the batched/process paths).
 
-The jit cache is keyed on the static config tuple; changing batch
+The jit cache is keyed on the static config tuple — shape-affecting
+fields only. Scalar knobs that vary within sweeps (latencies, epoch
+cutoffs, cycle caps) ride as per-row ``(B,)`` leaves of the ``consts``
+pytree, so heterogeneous hyperparameter batches share one compiled
+program instead of fragmenting the cache per config. Changing batch
 width, warp count or stream length retraces through jax's own
 shape-keyed cache. The batch axis is the explicit leading axis of every
 leaf, so the compiled step is also ``vmap``-able over an outer grid
@@ -110,27 +114,12 @@ class _Static(NamedTuple):
     l2_sets: int
     l2_ways: int
     dram_channels: int
-    dram_gap: int
     max_mlp: int
-    max_cycles: int
-    low_epoch: int
-    high_epoch: int
-    stride_ok: bool
-    aging: int
-    low_cutoff: float
-    high_cutoff: float
     timeline_every: int
     tl_cap: int
-    lat_l1: int
-    lat_smem: int
-    lat_migrate: int
-    lat_l2: int
-    lat_dram: int
 
 
 def _static_of(eng) -> _Static:
-    cfg = eng.cfg
-    dcfg = cfg.detector
     return _Static(
         n=eng.n_warps, L=eng.L, P=eng.P,
         l1_sets=eng.l1_sets, l1_ways=eng.l1_ways,
@@ -138,15 +127,9 @@ def _static_of(eng) -> _Static:
         nrb=eng.nrb, v_sets=eng.v_sets, v_k=eng.v_k,
         nw=eng.nw, le=eng.list_entries, sat_max=eng.sat_max,
         l2_sets=eng.l2_sets, l2_ways=eng.l2_ways,
-        dram_channels=eng.dram_channels, dram_gap=eng.dram_gap,
-        max_mlp=eng.max_mlp, max_cycles=eng.max_cycles,
-        low_epoch=eng.low_epoch, high_epoch=eng.high_epoch,
-        stride_ok=bool(eng._stride_ok), aging=dcfg.aging_high_epochs,
-        low_cutoff=dcfg.low_cutoff, high_cutoff=dcfg.high_cutoff,
-        timeline_every=eng.timeline_every, tl_cap=eng.tl_cap,
-        lat_l1=cfg.lat_l1, lat_smem=cfg.lat_smem,
-        lat_migrate=cfg.lat_migrate, lat_l2=cfg.lat_l2,
-        lat_dram=cfg.lat_dram)
+        dram_channels=eng.dram_channels,
+        max_mlp=eng.max_mlp,
+        timeline_every=eng.timeline_every, tl_cap=eng.tl_cap)
 
 
 # mutable state: (engine attribute, state key); det planes/consts below
@@ -195,6 +178,17 @@ def _arrays_of(eng):
         "mode_p": eng.mode_p, "mode_t": eng.mode_t,
         "ccws_base": eng.ccws_base, "ccws_budget": eng.ccws_budget,
         "sp_thresh": eng.sp_thresh, "bump": bump,
+        # per-row config planes: knobs that vary within a shape class
+        # ride as (B,) consts so heterogeneous sweeps share one compile
+        "lat_l1": eng.lat_l1, "lat_smem": eng.lat_smem,
+        "lat_migrate": eng.lat_migrate, "lat_l2": eng.lat_l2,
+        "lat_dram": eng.lat_dram, "dram_gap": eng.dram_gap,
+        "max_cycles": eng.max_cycles,
+        "low_epoch": eng.low_epoch, "high_epoch": eng.high_epoch,
+        "stride_ok": eng._stride_ok,
+        "aging": eng.det_pl.aging_high,
+        "low_cutoff": eng.det_pl.low_cutoff,
+        "high_cutoff": eng.det_pl.high_cutoff,
     }
     return state, consts
 
@@ -253,7 +247,7 @@ def _statp_tick(S, cst, st, m):
     reqs = st["dram_requests"]
     util = jnp.where(
         cyc > 0,
-        _f64(reqs * S.dram_gap)
+        _f64(reqs * cst["dram_gap"])
         / _f64(jnp.maximum(S.dram_channels * cyc, 1)), 0.0)
     util = jnp.minimum(util, 1.0)
     new = util < cst["sp_thresh"]
@@ -268,16 +262,16 @@ def _statp_tick(S, cst, st, m):
     return st
 
 
-def _irs_cum_leq(S, st, wid, act):
+def _irs_cum_leq(S, cst, st, wid, act):
     """Single-rounding cumulative-IRS cutoff (epoch.irs_cum_leq)."""
     arB = jnp.arange(st["cycle"].shape[0])
     inst = st["d_irs_inst"]
     hits = st["d_irs_hits"][arB, wid % S.nw]
     bad = (inst <= 0) | (act <= 0)
-    return bad | (_f64(hits * act) <= S.low_cutoff * _f64(inst))
+    return bad | (_f64(hits * act) <= cst["low_cutoff"] * _f64(inst))
 
 
-def _ciao_low(S, st, m, act):
+def _ciao_low(S, cst, st, m, act):
     """epoch.ciao_low_tick: pop at most one stalled and one isolated
     warp per flagged cell, newest first."""
     arB = jnp.arange(st["cycle"].shape[0])
@@ -290,7 +284,7 @@ def _ciao_low(S, st, m, act):
     k1 = st["d_pair_list"][arB, topc % le, 1]
     kc = jnp.where(k1 >= 0, k1, 0)
     pop = has & ((k1 == NO_WARP) | st["done"][arB, kc]
-                 | _irs_cum_leq(S, st, kc, act))
+                 | _irs_cum_leq(S, cst, st, kc, act))
     st["stall_len"] = sl - pop
     st["allowed_pl"] = st["allowed_pl"].at[arB, topc].set(
         st["allowed_pl"][arB, topc] | pop)
@@ -305,7 +299,7 @@ def _ciao_low(S, st, m, act):
     k2 = st["d_pair_list"][arB, tic % le, 0]
     k2c = jnp.where(k2 >= 0, k2, 0)
     pop2 = ok & ((k2 == NO_WARP) | st["done"][arB, k2c]
-                 | _irs_cum_leq(S, st, k2c, act))
+                 | _irs_cum_leq(S, cst, st, k2c, act))
     st["iso_len"] = il - pop2
     st["isolated_pl"] = st["isolated_pl"].at[arB, tic].set(
         st["isolated_pl"][arB, tic] & ~pop2)
@@ -325,7 +319,7 @@ def _ciao_high(S, cst, st, m):
     act = st["d_high_snap_act"][:, None]
     win = st["d_high_snap_win"][:, None]
     hits = st["d_high_snap_hits"][:, np.arange(n) % S.nw]
-    over = _f64(hits * act) > S.high_cutoff * _f64(win)
+    over = _f64(hits * act) > cst["high_cutoff"][:, None] * _f64(win)
     cand = m[:, None] & alive & over \
         & (jnp.sum(alive, axis=1) > 1)[:, None]
     order = jnp.argsort(jnp.where(cand, -hits, _DEAD_KEY), axis=1,
@@ -376,9 +370,10 @@ def _ciao_tick(S, cst, st, m):
     ws = np.arange(S.nw) % S.v_sets             # wid -> vta set (static)
     it = st["d_inst_total"]
     cur = st["d_vta_hits"][:, ws]
-    lowm = m & ((it // S.low_epoch) != st["d_low_idx"])
+    lo, hi = cst["low_epoch"], cst["high_epoch"]
+    lowm = m & ((it // lo) != st["d_low_idx"])
     win = jnp.maximum(it - st["d_low_base_inst"], 1)
-    st["d_low_idx"] = jnp.where(lowm, it // S.low_epoch, st["d_low_idx"])
+    st["d_low_idx"] = jnp.where(lowm, it // lo, st["d_low_idx"])
     st["d_low_snap_hits"] = jnp.where(
         lowm[:, None], cur - st["d_low_base_hits"], st["d_low_snap_hits"])
     st["d_low_snap_win"] = jnp.where(lowm, win, st["d_low_snap_win"])
@@ -386,9 +381,9 @@ def _ciao_tick(S, cst, st, m):
     st["d_low_base_hits"] = jnp.where(lowm[:, None], cur,
                                       st["d_low_base_hits"])
     st["d_low_base_inst"] = jnp.where(lowm, it, st["d_low_base_inst"])
-    highm = m & ((it // S.high_epoch) != st["d_high_idx"])
+    highm = m & ((it // hi) != st["d_high_idx"])
     winh = jnp.maximum(it - st["d_high_base_inst"], 1)
-    st["d_high_idx"] = jnp.where(highm, it // S.high_epoch,
+    st["d_high_idx"] = jnp.where(highm, it // hi,
                                  st["d_high_idx"])
     st["d_high_snap_hits"] = jnp.where(
         highm[:, None], cur - st["d_high_base_hits"],
@@ -401,14 +396,16 @@ def _ciao_tick(S, cst, st, m):
     st["d_high_base_inst"] = jnp.where(highm, it,
                                        st["d_high_base_inst"])
     st["d_high_crossings"] = st["d_high_crossings"] + highm
-    if S.aging:
-        aged = highm & (st["d_high_crossings"] % S.aging == 0)
-        st["d_irs_inst"] = jnp.where(aged, st["d_irs_inst"] // 2,
-                                     st["d_irs_inst"])
-        st["d_irs_hits"] = jnp.where(aged[:, None],
-                                     st["d_irs_hits"] // 2,
-                                     st["d_irs_hits"])
-    st = _gated(st, lowm, lambda s, mm, a: _ciao_low(S, s, mm, a), n_act)
+    ag = cst["aging"]
+    aged = highm & (ag > 0) \
+        & (st["d_high_crossings"] % jnp.maximum(ag, 1) == 0)
+    st["d_irs_inst"] = jnp.where(aged, st["d_irs_inst"] // 2,
+                                 st["d_irs_inst"])
+    st["d_irs_hits"] = jnp.where(aged[:, None],
+                                 st["d_irs_hits"] // 2,
+                                 st["d_irs_hits"])
+    st = _gated(st, lowm,
+                lambda s, mm, a: _ciao_low(S, cst, s, mm, a), n_act)
     st = _gated(st, highm, lambda s, mm: _ciao_high(S, cst, s, mm))
     del arB
     return st
@@ -435,11 +432,11 @@ def _epoch_service(S, cst, st, mask, anchor):
                             st["allowed_pl"] & ~st["done"], st["avail"])
     st["iso"] = jnp.where(mask[:, None], st["isolated_pl"], st["iso"])
     st["byp"] = jnp.where(mask[:, None], st["bypass_pl"], st["byp"])
-    nxt = (li // S.low_epoch + 1) * S.low_epoch
-    if S.stride_ok:
-        skip = (fam == F_CIAO) & (st["stall_len"] + st["iso_len"] == 0)
-        nxt = jnp.where(skip,
-                        (li // S.high_epoch + 1) * S.high_epoch, nxt)
+    lo, hi = cst["low_epoch"], cst["high_epoch"]
+    nxt = (li // lo + 1) * lo
+    skip = cst["stride_ok"] & (fam == F_CIAO) \
+        & (st["stall_len"] + st["iso_len"] == 0)
+    nxt = jnp.where(skip, (li // hi + 1) * hi, nxt)
     st["next_epoch"] = jnp.where(anchor, nxt, st["next_epoch"])
     return st
 
@@ -612,7 +609,7 @@ def _mem_chain(S, cst, st, mem, tok, widc, cycle):
         st["l1_reused"][arB, f_hit] | hit)
     stamp = st["l1_stamp"].at[arB, f_hit].set(
         jnp.where(hit, st["tick"], st["l1_stamp"][arB, f_hit]))
-    lat = jnp.where(hit, S.lat_l1, lat)
+    lat = jnp.where(hit, cst["lat_l1"], lat)
 
     # ---- CIAO-P smem region: evictions insert before the probe ----
     rb = cst["region_blocks"]
@@ -623,7 +620,7 @@ def _mem_chain(S, cst, st, mem, tok, widc, cycle):
     sold = st["smem_tags"][arB, sidx]
     shit = iso2 & (sold == line)
     st["cnt_smem_hit"] = st["cnt_smem_hit"] + shit
-    lat = jnp.where(shit, S.lat_smem, lat)
+    lat = jnp.where(shit, cst["lat_smem"], lat)
     smiss = iso2 & ~shit
     sevict = smiss & (sold >= 0)
     st["cnt_smem_evictions"] = st["cnt_smem_evictions"] + sevict
@@ -660,7 +657,7 @@ def _mem_chain(S, cst, st, mem, tok, widc, cycle):
     owners = owners.at[arB, f_hit].set(
         jnp.where(mig, -1, owners[arB, f_hit]))
     st["cnt_smem_migrate"] = st["cnt_smem_migrate"] + mig
-    lat = jnp.where(mig, S.lat_migrate, lat)
+    lat = jnp.where(mig, cst["lat_migrate"], lat)
     smiss2 = smiss & ~mig
     st["cnt_smem_miss"] = st["cnt_smem_miss"] + smiss2
     post = post | smiss2
@@ -681,7 +678,7 @@ def _mem_chain(S, cst, st, mem, tok, widc, cycle):
     h2 = post & l2res
     m2 = post & ~l2res
     st["l2_hits"] = st["l2_hits"] + h2
-    lat = jnp.where(h2, S.lat_l2, lat)
+    lat = jnp.where(h2, cst["lat_l2"], lat)
     f2 = b2 + jnp.argmax(eq2, axis=1)
     vic2 = b2 + jnp.argmin(jnp.take_along_axis(st["l2_stamp"], wi2, 1),
                            axis=1)
@@ -692,10 +689,10 @@ def _mem_chain(S, cst, st, mem, tok, widc, cycle):
     free = st["dram_free"][arB, chn]
     start = jnp.maximum(cycle, free)
     st["dram_free"] = st["dram_free"].at[arB, chn].set(
-        jnp.where(m2, start + S.dram_gap, free))
+        jnp.where(m2, start + cst["dram_gap"], free))
     st["dram_requests"] = st["dram_requests"] + m2
     st["cnt_dram_reqs"] = st["cnt_dram_reqs"] + m2
-    lat = jnp.where(m2, S.lat_dram + start - cycle, lat)
+    lat = jnp.where(m2, cst["lat_dram"] + start - cycle, lat)
     f2 = jnp.where(m2, vic2, f2)
     st["l2_stamp"] = st["l2_stamp"].at[arB, f2].set(
         jnp.where(post, st["l2_tick"], st["l2_stamp"][arB, f2]))
@@ -710,7 +707,7 @@ def _iteration(S, cst, st):
     arB = jnp.arange(B)
     st = dict(st)
     cycle = st["cycle"]
-    act = (st["remaining"] > 0) & (cycle < S.max_cycles)
+    act = (st["remaining"] > 0) & (cycle < cst["max_cycles"])
 
     # ---- warp selection (greedy-then-oldest + fused event skip) ----
     ready, avail = st["ready"], st["avail"]
@@ -730,16 +727,16 @@ def _iteration(S, cst, st):
     w2 = jnp.argmin(sched, axis=1)
     thr = skip & ~avail[arB, w2]
     # everything throttled: advance to let epochs fire (no re-anchor)
-    st["cycle"] = cycle = jnp.where(thr, cycle + S.low_epoch, cycle)
-    st["li"] = jnp.where(thr, st["li"] + S.low_epoch, st["li"])
+    st["cycle"] = cycle = jnp.where(thr, cycle + cst["low_epoch"], cycle)
+    st["li"] = jnp.where(thr, st["li"] + cst["low_epoch"], st["li"])
     st = _gated(st, thr,
                 lambda s, mm: _epoch_service(S, cst, s, mm,
                                              jnp.zeros_like(mm)))
     sk = skip & ~thr
     best = ready[arB, w2]
-    clamp = sk & (best >= S.max_cycles)         # slice stop at the cap
+    clamp = sk & (best >= cst["max_cycles"])    # slice stop at the cap
     st["cycle"] = cycle = jnp.where(
-        clamp, S.max_cycles, jnp.where(sk & ~clamp, best, cycle))
+        clamp, cst["max_cycles"], jnp.where(sk & ~clamp, best, cycle))
     sk = sk & ~clamp
     lw_ok2 = lw >= 0
     lwc2 = jnp.where(lw_ok2, lw, 0)
@@ -811,7 +808,7 @@ def _compiled(S: _Static):
     def run(state, cst):
         def cond(st):
             return jnp.any((st["remaining"] > 0)
-                           & (st["cycle"] < S.max_cycles))
+                           & (st["cycle"] < cst["max_cycles"]))
 
         def body(st):
             return _iteration(S, cst, st)

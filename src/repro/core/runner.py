@@ -299,6 +299,18 @@ def batch_token_budget() -> int:
     return _BATCH_TOKEN_BUDGET
 
 
+def batch_grouping() -> str:
+    """Batched-engine grouping mode: ``"shape"`` (default) groups cells
+    by :func:`repro.core.batched.config_shape_key` — the shape-affecting
+    config fields only — so a cutoff × throttle-depth sweep forms ONE
+    batch per shape class, with the varying knobs riding as per-row
+    config planes. ``$REPRO_BATCH_GROUPING=exact`` restores the legacy
+    per-``repr(SimConfig)`` grouping (one group per distinct config),
+    kept for A/B measurement in ``bench_batched``."""
+    val = os.environ.get("REPRO_BATCH_GROUPING", "shape")
+    return "exact" if val == "exact" else "shape"
+
+
 def batch_workers(requested: Optional[int] = None) -> int:
     """Worker-thread count for the batched engine: the explicit
     ``jobs``/``processes`` argument wins, else ``$REPRO_BATCH_WORKERS``,
@@ -351,6 +363,9 @@ def last_batched_perf() -> Dict[str, float]:
     * ``stepper_s`` / ``drain_s`` — in-stepper vs pause-drain time
       (summed across workers, so with ``jobs > 1`` they exceed wall)
     * ``rounds`` / ``batches`` / ``chunks`` — loop + chunking counts
+    * ``groups`` — config groups formed (shape classes under the
+      default grouping; distinct configs under
+      ``$REPRO_BATCH_GROUPING=exact``)
     * ``workers`` — thread-pool width used
     * ``peak_token_plane_bytes`` — high-water mark of concurrently
       live stacked token planes (the streaming memory bound)
@@ -407,33 +422,45 @@ def _run_cells_batched(cells: Sequence[_Cell],
     """
     import time as _time
 
-    from repro.core.batched import BatchCell, BatchedSMEngine
+    from repro.core.batched import (BatchCell, BatchedSMEngine,
+                                    config_shape_key)
     if backend is None:
         backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
     if backend == "jax":
         workers = 1          # one XLA dispatch queue; threads just queue
     perf: Dict[str, float] = dict(
         group_build_s=0.0, engine_build_s=0.0, stepper_s=0.0,
-        drain_s=0.0, rounds=0.0, batches=0.0, chunks=0.0,
+        drain_s=0.0, rounds=0.0, batches=0.0, chunks=0.0, groups=0.0,
         workers=float(workers), peak_token_plane_bytes=0.0)
     t0 = _time.perf_counter()
-    # (cell index, limit ordinal, BatchCell); (cfg, gpu) groups chunks
-    groups: Dict[str, List[Tuple[int, int, BatchCell]]] = {}
+    grouping = batch_grouping()
+    # (cell index, limit ordinal, BatchCell); grouped by shape class
+    # (config_shape_key) by default — knobs that differ within a group
+    # ride as per-row config planes — or by exact config repr when
+    # $REPRO_BATCH_GROUPING=exact
+    groups: Dict[Any, List[Tuple[int, int, BatchCell]]] = {}
     for i, cell in enumerate(cells):
         wl = _cached_workload(cell.workload,
                               workload_seed(cell.seed, cell.workload),
                               cell.scale)
-        key = (repr(cell.cfg) if cell.cfg is not None else "default",
-               repr(cell.gpu))
+        cfg = cell.cfg if cell.cfg is not None else SimConfig()
+        if grouping == "shape":
+            key = config_shape_key(cfg, cell.gpu)
+        else:
+            key = (repr(cell.cfg) if cell.cfg is not None else "default",
+                   repr(cell.gpu))
         sub = groups.setdefault(key, [])
         if cell.policy in ("best-swl", "statpcal"):
             limits = ([wl.n_wrp] if getattr(wl, "n_wrp", 0)
                       else list(cell.best_swl_limits))
+            # per-limit subcells share the parent cfg object — the limit
+            # lives in policy kwargs, not a cloned SimConfig
             for j, lim in enumerate(limits):
                 sub.append((i, j, BatchCell(wl, cell.policy,
-                                            {"limit": lim})))
+                                            {"limit": lim}, cfg=cfg)))
         else:
-            sub.append((i, 0, BatchCell(wl, cell.policy)))
+            sub.append((i, 0, BatchCell(wl, cell.policy, cfg=cfg)))
+    perf["groups"] = float(len(groups))
     chunks = []
     for key, sub in groups.items():
         first = cells[sub[0][0]]

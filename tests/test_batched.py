@@ -155,6 +155,50 @@ def test_mixed_batch_matches_scalar(seed):
             assert dataclasses.asdict(res) == dataclasses.asdict(ref)
 
 
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10**6))
+def test_heterogeneous_knob_batch_matches_scalar(seed):
+    """Property: per-row config planes — a batch whose cells carry
+    different scalar knobs (epoch cutoffs, throttle depths, latencies,
+    aging, cycle caps) across every policy family is bit-identical to
+    per-cell scalar runs on all available backends."""
+    from repro.core import jax_backend
+    from repro.core.interference import DetectorConfig
+    rng = np.random.default_rng(seed)
+    names = ["bicg", "syrk", "kmn", "nw"]
+    policies = ["gto", "ccws", "statpcal", "best-swl",
+                "ciao-c", "ciao-p", "ciao-t"]
+    wls = {n: make_workload(n, seed=seed % 997, scale=0.06)
+           for n in names}
+    cells, refs = [], []
+    for _ in range(5):
+        n = names[int(rng.integers(len(names)))]
+        p = policies[int(rng.integers(len(policies)))]
+        low = int(rng.integers(20, 120))
+        cfg = SimConfig(
+            lat_dram=int(rng.integers(200, 400)),
+            lat_l2=int(rng.integers(60, 160)),
+            dram_gap=int(rng.integers(4, 16)),
+            max_cycles=int(rng.integers(30_000, 200_000)),
+            detector=DetectorConfig(
+                low_epoch=low,
+                high_epoch=low * int(rng.integers(2, 25)),
+                low_cutoff=round(float(rng.uniform(0.1, 0.9)), 2),
+                high_cutoff=round(float(rng.uniform(0.1, 0.9)), 2),
+                aging_high_epochs=int(rng.integers(0, 4))))
+        kwargs = ({"limit": int(rng.integers(2, 12))}
+                  if p in ("best-swl", "statpcal") else None)
+        cells.append(BatchCell(wls[n], p, kwargs, cfg=cfg))
+        refs.append(SMSimulator(wls[n], p, cfg,
+                                policy_kwargs=kwargs).run())
+    backends = BACKENDS + (["jax"] if jax_backend.available() else [])
+    for backend in backends:
+        got = run_batched(cells, backend=backend)
+        for ref, res in zip(refs, got):
+            assert dataclasses.asdict(res) == dataclasses.asdict(ref), \
+                backend
+
+
 # -------------------------------------------------------------- multi-SM
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_multi_sm_batch_matches_gpusim(backend):
@@ -207,6 +251,34 @@ def test_runner_engines_agree(tmp_path, monkeypatch):
     r_batch = run_grid(grid, engine="batched")
     r_auto = run_grid(grid, engine="auto")
     assert r_proc == r_batch == r_auto
+
+
+def test_runner_cutoff_sweep_forms_one_group(tmp_path, monkeypatch):
+    """A cutoff × throttle-depth sweep (heterogeneous knobs, one shape
+    class) runs as ONE batched group under the relaxed grouping key and
+    still matches the per-cell process engine record-for-record."""
+    monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path))
+    from repro.core.interference import DetectorConfig
+    from repro.core.runner import (ExperimentGrid, last_batched_perf,
+                                   run_grid)
+    variants = {}
+    for cut in (0.25, 0.5, 0.75):
+        for le in (40, 80):
+            variants[f"c{cut}-e{le}"] = SimConfig(
+                detector=DetectorConfig(low_cutoff=cut, low_epoch=le,
+                                        high_epoch=le * 20))
+    grid = ExperimentGrid(name="sweep", workloads=("syrk", "kmn"),
+                          policies=("ciao-c", "best-swl"), scale=0.06,
+                          best_swl_limits=(2, 8), variants=variants)
+    r_batch = run_grid(grid, engine="batched")
+    perf = last_batched_perf()
+    assert perf["groups"] == 1            # one shape class, not 6 configs
+    monkeypatch.setenv("REPRO_BATCH_GROUPING", "exact")
+    r_exact = run_grid(grid, engine="batched")
+    assert last_batched_perf()["groups"] == len(variants)
+    monkeypatch.delenv("REPRO_BATCH_GROUPING")
+    r_proc = run_grid(grid, engine="process")
+    assert r_batch == r_exact == r_proc
 
 
 def test_runner_multi_sm_grid_batches(tmp_path, monkeypatch):
