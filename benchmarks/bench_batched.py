@@ -83,6 +83,17 @@ bound, e.g. 0.25 — see the note above), ``--floor-parallel`` the
 2-worker thread-scaling speedup (auto-skipped when ``os.cpu_count()``
 < 2), and ``--floor-sweep`` the sweep shape/legacy grouping ratio.
 Ratios, not absolute rates, so noisy runners do not flap the job.
+
+**Chaos mode.** The bench doubles as the CI chaos smoke: run it under a
+``$REPRO_FAULT_PLAN`` (see :mod:`repro.core.faults`) and the runner's
+resilience layer must absorb the injected failures — every record
+equality assertion above still applies (a retried or backend-degraded
+chunk must produce bit-identical records), any quarantined
+``FailedCell`` fails the bench outright, and the ``resilience`` block
+in the JSON reports the retry/fallback/resume counters accumulated
+across all legs. ``--require-retries N`` exits nonzero unless at least
+N retries were actually exercised — guarding against a silently
+inert fault plan.
 """
 from __future__ import annotations
 
@@ -156,8 +167,16 @@ def _sweep_grid(quick: bool, scale: float):
                           scale=scale)
 
 
+# resilience counters accumulated across every timed/warm run_grid call
+# (reported in the JSON's "resilience" block; the chaos-smoke CI leg
+# asserts retries > 0 via --require-retries)
+_RESILIENCE = {"retries": 0.0, "fallback_cells": 0.0,
+               "failed_cells": 0.0, "truncated_cells": 0.0,
+               "chunks_resumed": 0.0, "shard_errors": 0.0}
+
+
 def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
-    from repro.core.runner import last_batched_perf, run_grid
+    from repro.core.runner import FailedCell, last_batched_perf, run_grid
     prev = os.environ.get("REPRO_BATCHED_BACKEND")
     if backend:
         os.environ["REPRO_BATCHED_BACKEND"] = backend
@@ -172,6 +191,16 @@ def _time_engine(grid, engine: str, jobs: int, backend: str = "") -> Dict:
             else:
                 os.environ["REPRO_BATCHED_BACKEND"] = prev
     perf = last_batched_perf() if engine in ("batched", "jax") else {}
+    for k in _RESILIENCE:
+        _RESILIENCE[k] += perf.get(k, 0.0)
+    failed = [r for r in records if isinstance(r, FailedCell)]
+    if failed:
+        f = failed[0]
+        raise RuntimeError(
+            f"{len(failed)} cell(s) quarantined under engine {engine!r} "
+            f"(first: {f.workload}/{f.policy}/{f.variant}: "
+            f"{f.error_type}: {f.error}) — the bench requires every "
+            "cell to complete, fault plan or not")
     return {"wall_s": wall, "records": records, "perf": perf}
 
 
@@ -302,6 +331,10 @@ def main() -> int:
                     help="skip the jitted XLA stepper measurement")
     ap.add_argument("--skip-multism", action="store_true",
                     help="skip the 2-SM shared-L2 grid measurement")
+    ap.add_argument("--require-retries", type=int, default=0,
+                    help="fail unless at least N chunk retries were "
+                         "exercised (the chaos-smoke guard that the "
+                         "injected fault plan actually fired)")
     args = ap.parse_args()
     repeats = args.repeats or (1 if args.quick else 2)
     scale = args.scale or (0.2 if args.quick else 0.5)
@@ -404,6 +437,10 @@ def main() -> int:
                         "detail": jax_backend.unavailable_reason()},
         "results": fig8["results"],
         "breakdown": fig8["breakdown"],
+        "resilience": dict(
+            _RESILIENCE,
+            fault_plan=os.environ.get("REPRO_FAULT_PLAN", ""),
+            run_ledger=os.environ.get("REPRO_RUN_LEDGER", "")),
     }
     if sweep is not None:
         from repro.core.batched import config_shape_key
@@ -494,7 +531,23 @@ def main() -> int:
     out.write_text(json.dumps(doc, indent=1, sort_keys=True))
     emit("batched/json", 0.0, str(out))
 
+    if _RESILIENCE["retries"] or os.environ.get("REPRO_FAULT_PLAN"):
+        emit("batched/resilience", 0.0,
+             f"retries={int(_RESILIENCE['retries'])};"
+             f"fallback={int(_RESILIENCE['fallback_cells'])};"
+             f"resumed={int(_RESILIENCE['chunks_resumed'])}")
+
     fail = False
+    if args.require_retries and \
+            _RESILIENCE["retries"] < args.require_retries:
+        print(f"# FAIL: only {int(_RESILIENCE['retries'])} chunk "
+              f"retries exercised, --require-retries "
+              f"{args.require_retries} — the fault plan did not fire")
+        fail = True
+    elif args.require_retries:
+        emit("batched/require_retries", 0.0,
+             f"ok:{int(_RESILIENCE['retries'])}>="
+             f"{args.require_retries}")
     if args.floor_ratio and ratio < args.floor_ratio:
         print(f"# FAIL: batched/pool ratio {ratio:.2f}x below floor "
               f"{args.floor_ratio:.2f}x")

@@ -12,10 +12,14 @@ from repro.core.gpu import (  # noqa: F401
     CTA, CTAScheduler, GPUConfig, GPUResult, GPUSimulator, make_ctas,
     run_gpu_policy_sweep)
 from repro.core.batched import (  # noqa: F401
-    BatchCell, BatchedSMEngine, run_batched, supports_config)
+    BatchCell, BatchedSMEngine, DeadlineExceeded, run_batched,
+    supports_config)
+from repro.core.faults import (  # noqa: F401
+    FaultPlan, FaultSpec, InjectedFault)
+from repro.core.ledger import RunLedger, grid_hash  # noqa: F401
 from repro.core.runner import (  # noqa: F401
-    ExperimentGrid, RunRecord, geomean, index_records, load_records,
-    run_grid, save_records)
+    ExperimentGrid, FailedCell, RunRecord, geomean, index_records,
+    load_records, run_grid, save_records)
 from repro.workloads import (  # noqa: F401
     WORKLOADS, Workload, load_workload, make_workload, register_workload,
     save_workload)

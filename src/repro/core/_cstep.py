@@ -26,6 +26,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import faults
+
 _c_i64 = ctypes.c_longlong
 _c_f64 = ctypes.c_double
 _p_i64 = ctypes.POINTER(ctypes.c_longlong)
@@ -310,4 +312,8 @@ def bind(eng, det_ptrs, score_ptrs, bumps) -> Params:
 
 
 def step(params: Params) -> None:
+    # fault-injection site for the resilience tests/chaos smoke: lets a
+    # FaultPlan fail or stall individual stepper rounds deterministically
+    # (zero-cost None check when no plan is installed)
+    faults.fire("stepper.step")
     _lib.step_cells(ctypes.byref(params))

@@ -72,6 +72,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import epoch as _epoch
+from repro.core import faults
 from repro.core.gpu import GPUConfig, GPUResult, sm_subworkloads
 from repro.core.interference import InterferenceDetector
 from repro.core.onchip import LINE, SMMT
@@ -104,6 +105,22 @@ WD_NOOP = 0         # BasePolicy.on_warp_done (GTO, CCWS, CIAO)
 WD_SWL = 1          # Best-SWL rotation: allowed_pl row IS the set
 WD_STATP = 2        # statPCAL rotation on the base set + mode rebuild
 WD_OBJECT = 3       # unknown subclass: per-cell object fallback
+
+
+class DeadlineExceeded(RuntimeError):
+    """Raised by :meth:`BatchedSMEngine.run` when the wall-clock
+    ``deadline`` passes mid-run. The engine's state is mid-flight and
+    not salvageable; callers (``run_grid(deadline_s=...)``) mark the
+    chunk's cells truncated-but-resumable and cancel pending chunks."""
+
+
+# when a wall-clock deadline is armed, single-SM batches run in bounded
+# per-row `until` quanta (the same slice mechanism multi-SM chips always
+# use, so results stay bit-identical) instead of one run-to-completion
+# stepper call — the deadline is checked between quanta. 100k cycles is
+# ~1ms of C-stepper work per row: fine-grained enough for second-scale
+# deadlines, coarse enough that slicing overhead stays in the noise.
+_DEADLINE_SLICE = 100_000
 
 
 def supports_config(cfg: SimConfig, gpu: Optional[GPUConfig] = None) -> bool:
@@ -828,10 +845,19 @@ class BatchedSMEngine:
         )
 
     # ------------------------------------------------------------- run
-    def run(self, timeline_every: int = 20_000):
+    def run(self, timeline_every: int = 20_000,
+            deadline: Optional[float] = None):
         """Run every cell to completion (one-shot). Returns a
         ``SimResult`` per cell for single-SM batches, a ``GPUResult``
-        per cell for multi-SM batches."""
+        per cell for multi-SM batches.
+
+        ``deadline`` is an absolute ``time.monotonic()`` instant; when
+        it passes mid-run the engine raises :class:`DeadlineExceeded`.
+        The C/numpy steppers check it between bounded-cycle quanta
+        (see ``_DEADLINE_SLICE``); the jax backend dispatches one XLA
+        program for the whole batch, so a deadline is only observed
+        between chunks by the runner, not inside the program."""
+        self.deadline = deadline
         if timeline_every != self.timeline_every:
             self.timeline_every = timeline_every
             self.window_mark[:] = timeline_every
@@ -865,9 +891,19 @@ class BatchedSMEngine:
         cap = int(self.max_cycles.max())
         slice_cycles = self.gpu.slice_cycles if self.gpu is not None \
             else cap
+        deadline = self.deadline
+        if deadline is not None and self.gpu is None:
+            # arm the slice mechanism on single-SM batches so the
+            # run-to-completion stepper call becomes bounded quanta the
+            # deadline can interleave; bit-identical to the unsliced
+            # run (rows only finalize when `until` hits max_cycles)
+            slice_cycles = min(slice_cycles, _DEADLINE_SLICE)
         perf = self.perf
         t = 0
         while t < cap and self.live.any():
+            if deadline is not None and time.monotonic() >= deadline:
+                raise DeadlineExceeded(
+                    f"wall-clock deadline passed at batch cycle {t}")
             t += slice_cycles
             until = np.minimum(t, self.max_cycles)
             for rows in self._phase_rows:
@@ -905,6 +941,10 @@ class BatchedSMEngine:
         def round_fn():
             live, runnable = self.live, self.runnable
             while bool((live & runnable).any()):
+                if self.deadline is not None \
+                        and time.monotonic() >= self.deadline:
+                    raise DeadlineExceeded(
+                        "wall-clock deadline passed mid-round")
                 t0 = time.perf_counter()
                 cstep.step(params)
                 t1 = time.perf_counter()
@@ -980,6 +1020,11 @@ class BatchedSMEngine:
         every = self._NP_DRAIN_EVERY
         live, runnable, pause = self.live, self.runnable, self.pause
         while bool((live & runnable).any()):
+            faults.fire("stepper.step")
+            if self.deadline is not None \
+                    and time.monotonic() >= self.deadline:
+                raise DeadlineExceeded(
+                    "wall-clock deadline passed mid-round")
             k = 0
             while k < every and \
                     bool((live & runnable & (pause == 0)).any()):

@@ -52,15 +52,20 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import itertools
 import json
 import multiprocessing
 import os
 import pathlib
 import threading
+import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
 
+from repro.core import faults
+from repro.core import ledger as _ledger
 from repro.core.gpu import GPUConfig, run_gpu_policy_sweep
 from repro.core.simulator import SimConfig, run_policy_sweep
 from repro.workloads import WORKLOADS, make_workload
@@ -116,6 +121,33 @@ class RunRecord:
 
 
 @dataclasses.dataclass
+class FailedCell:
+    """A grid cell quarantined by the resilience layer instead of
+    crashing the sweep: the last error, how many execution attempts were
+    made, and the backend-degradation trail that was walked (e.g.
+    ``["c", "c", "numpy", "scalar"]``). ``truncated`` cells were not
+    *broken* — the wall-clock ``deadline_s`` passed before they ran;
+    re-run with ``resume=`` to fill them in. Persisted alongside
+    ``RunRecord`` by :func:`save_records` (``"failed": true`` marker)
+    and skipped by :func:`index_records`."""
+    grid: str
+    workload: str
+    policy: str
+    variant: str
+    num_sms: int
+    seed: int
+    scale: float
+    error: str
+    error_type: str
+    attempts: int
+    backends: List[str] = dataclasses.field(default_factory=list)
+    truncated: bool = False
+
+
+AnyRecord = Union[RunRecord, FailedCell]
+
+
+@dataclasses.dataclass
 class _Cell:
     grid: str
     workload: str
@@ -159,16 +191,25 @@ def _load_or_make_workload(name: str, seed: int, scale: float):
     versioned :mod:`repro.workloads.io` format, so spawn workers and the
     batched group-builder load instead of regenerate. Writes go through
     a per-pid temp file + ``os.replace`` (atomic), so concurrent workers
-    racing on the same cell never read a torn file; any cache I/O error
-    falls back to generation.
+    racing on the same cell never read a torn file. A cache file that
+    fails to load (torn write survivor, bad disk, checksum mismatch —
+    the format carries a content CRC) is *deleted* before regenerating,
+    so the bad bytes are re-parsed at most once instead of on every
+    future run.
     """
     cache = workload_cache_dir()
     path = None
     if cache is not None:
         path = cache / f"{name}-s{seed}-x{scale:g}.npz"
         if path.exists():
-            with contextlib.suppress(Exception):
+            try:
+                faults.fire("cache.load", key=path.name, path=str(path))
                 return load_workload(path)
+            except Exception:
+                # corrupt/truncated/stale cache entry: remove it and
+                # fall through to curated/generate (which re-writes it)
+                with contextlib.suppress(OSError):
+                    path.unlink()
     # the shipped, checksum-manifested curated set (cross-machine
     # reproducibility); $REPRO_NO_CURATED skips it
     from repro.workloads.curated import load_curated
@@ -396,10 +437,48 @@ def _shard_chunks(chunks: List[Tuple], workers: int) -> List[Tuple]:
     return out
 
 
+def _backend_ladder(backend: Optional[str]) -> List[str]:
+    """The degradation ladder for one requested backend: the rungs a
+    failing chunk walks down before the per-cell scalar fallback. Every
+    rung is bit-exact vs every other (pinned by the golden and engine-
+    equality suites), so degrading a chunk cannot change its records —
+    only its speed."""
+    from repro.core import _cstep
+    have_c = _cstep.available()
+    if backend in (None, "auto"):
+        return (["c"] if have_c else []) + ["numpy"]
+    if backend == "jax":
+        return ["jax"] + (["c"] if have_c else []) + ["numpy"]
+    if backend == "c":
+        return ["c", "numpy"]
+    return [backend]
+
+
+def _failed_cell(cell: _Cell, exc: BaseException, attempts: int,
+                 trail: Sequence[str], truncated: bool = False
+                 ) -> FailedCell:
+    return FailedCell(
+        grid=cell.grid, workload=cell.workload, policy=cell.policy,
+        variant=cell.variant,
+        num_sms=(cell.gpu.num_sms if cell.gpu is not None else 1),
+        seed=cell.seed, scale=cell.scale,
+        error=str(exc), error_type=type(exc).__name__,
+        attempts=attempts, backends=list(trail), truncated=truncated)
+
+
+def _cell_fault_key(cell: _Cell) -> str:
+    return f"{cell.workload}/{cell.policy}/{cell.variant}"
+
+
 def _run_cells_batched(cells: Sequence[_Cell],
                        backend: Optional[str] = None,
                        workers: int = 1,
-                       ) -> Tuple[List[RunRecord], Dict[str, float]]:
+                       strict: bool = False,
+                       retries: int = 1,
+                       deadline: Optional[float] = None,
+                       run_ledger=None,
+                       gidx: Optional[Sequence[int]] = None,
+                       ) -> Tuple[List[AnyRecord], Dict[str, float]]:
     """Run batchable cells through the lockstep engine: flatten Best-SWL
     / statPCAL limit sweeps into per-limit subcells, group by (SimConfig,
     GPU shape), chunk groups under a token-plane memory budget, run each
@@ -419,19 +498,36 @@ def _run_cells_batched(cells: Sequence[_Cell],
     size. Chunks launch largest-first (LPT) but records are reassembled
     by cell index, so output is byte-identical to the serial order at
     any worker count. Returns ``(records, perf)``.
+
+    **Fault isolation** (``strict=False``): each chunk executes behind
+    per-future error capture. A failing chunk is retried ``retries``
+    times on its first backend, then walks the degradation ladder
+    (jax → C → numpy — all bit-exact, so records are unaffected), then
+    falls back to per-cell scalar execution; cells that still fail are
+    quarantined as :class:`FailedCell` entries while the rest of the
+    sweep completes. ``strict=True`` restores the fail-fast raise.
+    ``deadline`` (absolute ``time.monotonic()``) cancels chunks that
+    have not started and truncates running ones mid-flight; their cells
+    come back as ``FailedCell(truncated=True)``. ``run_ledger`` saves a
+    shard per fully-successful chunk (keyed by the global cell ids in
+    ``gidx``) and skips chunks whose shard already exists.
     """
     import time as _time
 
     from repro.core.batched import (BatchCell, BatchedSMEngine,
-                                    config_shape_key)
+                                    DeadlineExceeded, config_shape_key)
     if backend is None:
         backend = os.environ.get("REPRO_BATCHED_BACKEND", "auto")
     if backend == "jax":
         workers = 1          # one XLA dispatch queue; threads just queue
+    if gidx is None:
+        gidx = list(range(len(cells)))
     perf: Dict[str, float] = dict(
         group_build_s=0.0, engine_build_s=0.0, stepper_s=0.0,
         drain_s=0.0, rounds=0.0, batches=0.0, chunks=0.0, groups=0.0,
-        workers=float(workers), peak_token_plane_bytes=0.0)
+        workers=float(workers), peak_token_plane_bytes=0.0,
+        retries=0.0, fallback_cells=0.0, failed_cells=0.0,
+        truncated_cells=0.0, chunks_resumed=0.0, shard_errors=0.0)
     t0 = _time.perf_counter()
     grouping = batch_grouping()
     # (cell index, limit ordinal, BatchCell); grouped by shape class
@@ -476,22 +572,107 @@ def _run_cells_batched(cells: Sequence[_Cell],
     perf["group_build_s"] += _time.perf_counter() - t0
 
     meter = _PlaneMeter()
+    # content-addressed ledger keys (global cell ids, so a resume with a
+    # different worker count / chunk plan still matches what it can) and
+    # human-readable fault keys for $REPRO_FAULT_PLAN targeting
+    chunk_keys = [
+        _ledger.chunk_key([f"{gidx[i]}:{j}" for i, j, _ in chunk])
+        if run_ledger is not None else None
+        for _, _, chunk in chunks]
+    fault_keys = [
+        ",".join(sorted({_cell_fault_key(cells[i]) for i, _, _ in chunk}))
+        for _, _, chunk in chunks]
+    local_of = {g: i for i, g in enumerate(gidx)}
+
+    def _resume_chunk(n: int):
+        """("resumed", triples, recs) from the ledger shard, or None."""
+        if run_ledger is None:
+            return None
+        items = run_ledger.load_chunk(chunk_keys[n])
+        if items is None:
+            return None
+        triples, recs = [], []
+        try:
+            for it in items:
+                i = local_of[it["i"]]
+                if it["kind"] == "record":
+                    recs.append((i, RunRecord(**it["rec"])))
+                else:
+                    triples.append((i, int(it["j"]),
+                                    _ledger.doc_to_result(it)))
+        except (KeyError, TypeError, ValueError):
+            return None            # stale/foreign shard: just re-run
+        return ("resumed", triples, recs)
+
+    def _save_shard(n: int, items: List[dict]) -> None:
+        """Best-effort: a shard that fails to write costs a re-run on
+        resume, never the run itself."""
+        if run_ledger is None:
+            return
+        try:
+            run_ledger.save_chunk(chunk_keys[n], items)
+        except Exception:
+            perf["shard_errors"] += 1
 
     def _run_chunk(n: int):
         cfg, gpu, chunk = chunks[n]
+        resumed = _resume_chunk(n)
+        if resumed is not None:
+            return resumed
+        cell_is = sorted({i for i, _, _ in chunk})
+        if deadline is not None and _time.monotonic() >= deadline:
+            return ("truncated", cell_is, 0, [])
         be = ("auto" if (backend == "jax" and gpu is not None)
               else backend)
-        eng = BatchedSMEngine([bc for _, _, bc in chunk], cfg,
-                              backend=be, gpu=gpu)
-        nbytes = int(eng.toks.nbytes)
-        meter.add(nbytes)
-        try:
-            triples = [(i, j, res)
-                       for (i, j, _), res in zip(chunk, eng.run())]
-            return triples, dict(eng.perf)
-        finally:
-            meter.sub(nbytes)
-        # eng (and its stacked planes) dies here — streaming
+        ladder = _backend_ladder(be)
+        attempts = 0
+        trail: List[str] = []
+        for rung_no, rung in enumerate(ladder):
+            # transient failures are retried on the first rung before
+            # degrading; later rungs get one attempt each
+            for _ in range(retries + 1 if rung_no == 0 else 1):
+                attempts += 1
+                trail.append(rung)
+                try:
+                    faults.fire("chunk.dispatch", key=fault_keys[n])
+                    eng = BatchedSMEngine([bc for _, _, bc in chunk],
+                                          cfg, backend=rung, gpu=gpu)
+                    nbytes = int(eng.toks.nbytes)
+                    meter.add(nbytes)
+                    try:
+                        triples = [(i, j, res) for (i, j, _), res
+                                   in zip(chunk,
+                                          eng.run(deadline=deadline))]
+                        eperf = dict(eng.perf)
+                    finally:
+                        meter.sub(nbytes)
+                    # eng (and its stacked planes) dies here — streaming
+                    _save_shard(n, [
+                        dict(_ledger.result_to_doc(res), i=gidx[i], j=j)
+                        for i, j, res in triples])
+                    return ("ok", triples, eperf, attempts, trail)
+                except DeadlineExceeded:
+                    return ("truncated", cell_is, attempts, trail)
+                except Exception:
+                    if strict:
+                        raise
+        # every engine rung failed: per-cell scalar fallback, the one
+        # path that needs no batched stepper at all
+        trail = trail + ["scalar"]
+        recs, fails = [], []
+        for i in cell_is:
+            cell = cells[i]
+            try:
+                faults.fire("cell.run", key=_cell_fault_key(cell))
+                recs.append((i, _run_cell(cell)))
+            except DeadlineExceeded:
+                fails.append((i, _failed_cell(
+                    cell, RuntimeError("wall-clock deadline exceeded"),
+                    attempts + 1, trail, truncated=True)))
+            except Exception as exc:
+                fails.append((i, _failed_cell(cell, exc, attempts + 1,
+                                              trail)))
+        return ("fallback", recs, fails, attempts, trail)
 
     if workers > 1 and len(chunks) > 1:
         with ThreadPoolExecutor(max_workers=workers) as pool:
@@ -500,19 +681,59 @@ def _run_cells_batched(cells: Sequence[_Cell],
         outs = [_run_chunk(n) for n in order]
 
     results: Dict[int, List] = {}
-    for triples, eperf in outs:
-        for i, j, res in triples:
-            results.setdefault(i, []).append((j, res))
-        perf["engine_build_s"] += eperf["build_s"]
-        perf["stepper_s"] += eperf["stepper_s"]
-        perf["drain_s"] += eperf["drain_s"]
-        perf["rounds"] += eperf["rounds"]
-        perf["batches"] += 1
+    rec_map: Dict[int, RunRecord] = {}
+    fail_map: Dict[int, FailedCell] = {}
+    for out in outs:
+        kind = out[0]
+        if kind == "ok":
+            _, triples, eperf, attempts, _ = out
+            for i, j, res in triples:
+                results.setdefault(i, []).append((j, res))
+            perf["engine_build_s"] += eperf["build_s"]
+            perf["stepper_s"] += eperf["stepper_s"]
+            perf["drain_s"] += eperf["drain_s"]
+            perf["rounds"] += eperf["rounds"]
+            perf["batches"] += 1
+            perf["retries"] += attempts - 1
+        elif kind == "resumed":
+            _, triples, recs = out
+            for i, j, res in triples:
+                results.setdefault(i, []).append((j, res))
+            rec_map.update(recs)
+            perf["chunks_resumed"] += 1
+        elif kind == "fallback":
+            _, recs, fails, attempts, _ = out
+            rec_map.update(recs)
+            fail_map.update(fails)
+            perf["retries"] += attempts - 1
+            perf["fallback_cells"] += len(recs) + len(fails)
+        else:                                  # truncated
+            _, cell_is, attempts, trail = out
+            perf["retries"] += max(attempts - 1, 0)
+            for i in cell_is:
+                fail_map[i] = _failed_cell(
+                    cells[i],
+                    RuntimeError("wall-clock deadline exceeded"),
+                    attempts, trail, truncated=True)
+    perf["failed_cells"] = float(len(fail_map))
+    perf["truncated_cells"] = float(
+        sum(1 for f in fail_map.values() if f.truncated))
     perf["peak_token_plane_bytes"] = float(meter.peak)
 
     t0 = _time.perf_counter()
-    records = []
+    records: List[AnyRecord] = []
     for i, cell in enumerate(cells):
+        # priority: quarantined failure > whole-cell fallback/resumed
+        # record > sweep reduce of the batched subcell results. A cell
+        # whose subcells were split across chunks can carry both partial
+        # triples and a whole-cell record — the record is the complete
+        # answer (scalar == batched is pinned by the equality suite)
+        if i in fail_map:
+            records.append(fail_map[i])
+            continue
+        if i in rec_map:
+            records.append(rec_map[i])
+            continue
         sweep = sorted(results[i])
         best = None
         for _, res in sweep:
@@ -583,10 +804,35 @@ def _chunk_batch(sub: Sequence[Tuple],
     return chunks
 
 
+def _run_cell_safe(cell: _Cell):
+    """Spawn-pool-safe guarded cell execution: returns a tagged tuple
+    instead of raising, so one broken cell cannot kill the pool map.
+    (Top-level so it pickles; the fault plan reaches workers through
+    ``$REPRO_FAULT_PLAN`` in the inherited environment.)"""
+    try:
+        faults.fire("cell.run", key=_cell_fault_key(cell))
+        return ("ok", _run_cell(cell))
+    except Exception as exc:
+        return ("err", type(exc).__name__, str(exc))
+
+
+# process-unique sequence for auto-generated run ids ($REPRO_RUN_LEDGER)
+_RUN_SEQ = itertools.count()
+
+
+def _auto_run_id(grid: ExperimentGrid, ghash: str) -> str:
+    return f"{grid.name}-{ghash[:10]}-p{os.getpid()}-{next(_RUN_SEQ)}"
+
+
 def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
              json_path: Optional[str] = None,
              engine: str = "auto",
-             jobs: Optional[int] = None) -> List[RunRecord]:
+             jobs: Optional[int] = None,
+             strict: bool = False,
+             retries: int = 1,
+             deadline_s: Optional[float] = None,
+             run_id: Optional[str] = None,
+             resume: Optional[str] = None) -> List[AnyRecord]:
     """Run every cell; see the module docstring for the three engines.
     ``jobs`` (preferred name; ``processes`` is the legacy alias) sets
     the parallelism: the batched engine fans chunks over that many
@@ -594,7 +840,26 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
     process engine — and any cells the batched engine cannot take —
     fans over a spawn pool of that many workers. Records come back in
     grid order and bit-identical regardless of execution order, engine,
-    or worker count."""
+    or worker count.
+
+    Resilience (see also the README's "Resilience & fault injection"):
+
+    * ``strict=False`` (default) fault-isolates execution — failing
+      chunks retry ``retries`` times, degrade down the backend ladder,
+      then fall back per cell; cells that still fail come back as
+      :class:`FailedCell` entries instead of an exception.
+      ``strict=True`` restores fail-fast raising.
+    * ``deadline_s`` bounds the run's wall clock: the steppers slice
+      their run-to-completion calls into bounded-cycle quanta, pending
+      chunks are cancelled once the deadline passes, and unfinished
+      cells return ``FailedCell(truncated=True)`` — resumable.
+    * ``run_id`` opens a run ledger under ``results/runs/<run_id>/``
+      (checkpoint shards per completed chunk); ``resume=<run_id>``
+      reopens one and re-runs only the chunks without shards, yielding
+      records bit-identical to an uninterrupted run. Setting
+      ``$REPRO_RUN_LEDGER=1`` auto-ledgers every run under a generated
+      id (a crash flight recorder).
+    """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
     if engine == "jax":
@@ -604,8 +869,25 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
                                + jax_backend.unavailable_reason())
     if jobs is None:
         jobs = processes
+    if resume is not None:
+        if run_id is not None and run_id != resume:
+            raise ValueError(f"run_id={run_id!r} conflicts with "
+                             f"resume={resume!r}")
+        run_id = resume
+    ghash = _ledger.grid_hash(grid)
+    if run_id is None and os.environ.get("REPRO_RUN_LEDGER", ""):
+        run_id = _auto_run_id(grid, ghash)
+    led = None
+    if run_id is not None:
+        led = _ledger.RunLedger(run_id)
+        led.open({"grid_hash": ghash, "grid": _grid_meta(grid),
+                  "engine": engine, "jobs": jobs, "strict": strict,
+                  "cells": len(expand_grid(grid))},
+                 resume=resume is not None)
+    deadline = (time.monotonic() + deadline_s
+                if deadline_s is not None else None)
     cells = expand_grid(grid)
-    records: List[Optional[RunRecord]] = [None] * len(cells)
+    records: List[Optional[AnyRecord]] = [None] * len(cells)
     if engine != "process":
         batch_idx = [i for i, c in enumerate(cells) if _batchable(c)]
         if engine in ("batched", "jax") \
@@ -613,25 +895,81 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
             recs, perf = _run_cells_batched(
                 [cells[i] for i in batch_idx],
                 backend="jax" if engine == "jax" else None,
-                workers=batch_workers(jobs))
+                workers=batch_workers(jobs),
+                strict=strict, retries=retries, deadline=deadline,
+                run_ledger=led, gidx=batch_idx)
             _TLS.batched_perf = perf
             for i, rec in zip(batch_idx, recs):
                 records[i] = rec
     rest = [i for i in range(len(cells)) if records[i] is None]
+    if rest and led is not None:
+        # per-cell shards for the scalar/process path
+        still = []
+        for i in rest:
+            items = led.load_chunk(_ledger.chunk_key([f"cell:{i}"]))
+            rec = _rest_shard_to_record(items)
+            if rec is not None:
+                records[i] = rec
+            else:
+                still.append(i)
+        rest = still
+    if rest and deadline is not None and time.monotonic() >= deadline:
+        for i in rest:
+            records[i] = _failed_cell(
+                cells[i], RuntimeError("wall-clock deadline exceeded"),
+                0, [], truncated=True)
+        rest = []
     if rest:
         nproc = min(jobs or 1, len(rest))
+        runner = _run_cell if strict else _run_cell_safe
         if nproc > 1:
             ctx = multiprocessing.get_context("spawn")
             with ctx.Pool(nproc) as pool:
-                rest_records = pool.map(_run_cell,
-                                        [cells[i] for i in rest])
+                rest_out = pool.map(runner, [cells[i] for i in rest])
         else:
-            rest_records = [_run_cell(cells[i]) for i in rest]
-        for i, rec in zip(rest, rest_records):
-            records[i] = rec
+            rest_out = [runner(cells[i]) for i in rest]
+        for i, out in zip(rest, rest_out):
+            if strict:
+                records[i] = out
+            elif out[0] == "ok":
+                records[i] = out[1]
+            else:
+                records[i] = FailedCell(
+                    grid=cells[i].grid, workload=cells[i].workload,
+                    policy=cells[i].policy, variant=cells[i].variant,
+                    num_sms=(cells[i].gpu.num_sms if cells[i].gpu
+                             else 1),
+                    seed=cells[i].seed, scale=cells[i].scale,
+                    error=out[2], error_type=out[1], attempts=1,
+                    backends=["scalar"])
+            if led is not None and isinstance(records[i], RunRecord):
+                try:
+                    led.save_chunk(
+                        _ledger.chunk_key([f"cell:{i}"]),
+                        [{"kind": "record", "i": i,
+                          "rec": dataclasses.asdict(records[i])}])
+                except Exception:
+                    pass           # best-effort, like the chunk shards
+    if led is not None:
+        failed = [r for r in records if isinstance(r, FailedCell)]
+        status = ("truncated" if any(f.truncated for f in failed)
+                  else "partial" if failed else "complete")
+        led.finish(status)
     if json_path:
         save_records(records, json_path, grid=grid)
     return records
+
+
+def _rest_shard_to_record(items) -> Optional[RunRecord]:
+    if not items:
+        return None
+    try:
+        it = items[0]
+        if it["kind"] != "record":
+            return None
+        return RunRecord(**it["rec"])
+    except (KeyError, TypeError, ValueError):
+        return None
 
 
 def default_processes() -> int:
@@ -652,31 +990,52 @@ def _grid_meta(grid: ExperimentGrid) -> dict:
     }
 
 
-def save_records(records: Sequence[RunRecord], path: str,
+def _record_to_doc(r: AnyRecord) -> dict:
+    d = dataclasses.asdict(r)
+    if isinstance(r, FailedCell):
+        d["failed"] = True
+    return d
+
+
+def _doc_to_record(d: dict) -> AnyRecord:
+    d = dict(d)
+    if d.pop("failed", False):
+        return FailedCell(**d)
+    return RunRecord(**d)
+
+
+def save_records(records: Sequence[AnyRecord], path: str,
                  grid: Optional[ExperimentGrid] = None) -> str:
+    """Atomic JSON persistence (unique temp + fsync + ``os.replace``):
+    an interrupted run never leaves a torn ``results/*.json`` — readers
+    see the old complete file or the new complete file, nothing in
+    between. Quarantined :class:`FailedCell` entries persist alongside
+    ``RunRecord`` rows with a ``"failed": true`` marker."""
+    faults.fire("records.save", key=str(path), path=None)
     doc = {"schema": SCHEMA_VERSION,
            "grid": _grid_meta(grid) if grid else None,
-           "records": [dataclasses.asdict(r) for r in records]}
+           "records": [_record_to_doc(r) for r in records]}
     p = pathlib.Path(path)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    tmp = p.with_suffix(p.suffix + ".tmp")
-    tmp.write_text(json.dumps(doc, indent=1, sort_keys=True))
-    tmp.replace(p)
+    _ledger._atomic_write(p, json.dumps(doc, indent=1, sort_keys=True))
     return str(p)
 
 
-def load_records(path: str) -> List[RunRecord]:
+def load_records(path: str) -> List[AnyRecord]:
     doc = json.loads(pathlib.Path(path).read_text())
     if doc.get("schema") != SCHEMA_VERSION:
-        raise ValueError(f"unsupported results schema in {path}")
-    return [RunRecord(**r) for r in doc["records"]]
+        raise ValueError(
+            f"unsupported results schema {doc.get('schema')!r} in {path}")
+    return [_doc_to_record(r) for r in doc["records"]]
 
 
 # -------------------------------------------------------------- analysis
-def index_records(records: Sequence[RunRecord]
+def index_records(records: Sequence[AnyRecord]
                   ) -> Dict[Tuple[str, str, str], RunRecord]:
-    """(workload, policy, variant) -> record."""
-    return {(r.workload, r.policy, r.variant): r for r in records}
+    """(workload, policy, variant) -> record. Quarantined
+    :class:`FailedCell` entries are skipped — downstream analysis reads
+    successful cells only."""
+    return {(r.workload, r.policy, r.variant): r for r in records
+            if isinstance(r, RunRecord)}
 
 
 def geomean(values: Sequence[float]) -> float:

@@ -1,0 +1,177 @@
+"""Fault-isolated sweep execution: retry ladder, backend degradation,
+FailedCell quarantine, strict mode, wall-clock deadlines, and the
+workload-cache corruption recovery path.
+
+Every scenario here drives ``run_grid`` through ``faults.injected`` and
+checks the central invariant: because every rung of the backend ladder
+(jax / C / numpy / per-cell scalar) is bit-exact, *recovery never
+changes records* — a run that retried, degraded, or regenerated a cache
+file returns exactly the records of an undisturbed run.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import faults
+from repro.core.faults import InjectedFault
+from repro.core.runner import (ExperimentGrid, FailedCell, RunRecord,
+                               last_batched_perf, load_records, run_grid,
+                               save_records)
+
+GRID = ExperimentGrid(name="res", workloads=("syrk", "kmn"),
+                      policies=("gto", "ciao-c"), scale=0.05)
+SWEEP = ExperimentGrid(name="res-swl", workloads=("syrk",),
+                       policies=("gto", "best-swl"), scale=0.05,
+                       best_swl_limits=(2, 8))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_runs_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RUNS_DIR", str(tmp_path / "runs"))
+    monkeypatch.delenv("REPRO_RUN_LEDGER", raising=False)
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _base():
+    if not hasattr(_base, "recs"):
+        _base.recs = run_grid(GRID, engine="batched")
+    return _base.recs
+
+
+# ------------------------------------------------------- transient faults
+
+def test_transient_dispatch_fault_is_retried_bit_identical():
+    with faults.injected("chunk.dispatch@1=raise"):
+        recs = run_grid(GRID, engine="batched")
+    perf = last_batched_perf()
+    assert perf["retries"] >= 1
+    assert perf["failed_cells"] == 0
+    assert recs == _base()
+
+
+def test_quarter_of_dispatches_failing_still_completes():
+    """The acceptance scenario's transient half: every 4th dispatch
+    attempt raises, yet the run completes with identical records."""
+    with faults.injected("chunk.dispatch@%4=raise"):
+        recs = run_grid(GRID, engine="batched", jobs=2)
+    assert recs == _base()
+    assert not any(isinstance(r, FailedCell) for r in recs)
+
+
+def test_strict_mode_restores_raise():
+    with faults.injected("chunk.dispatch@*=raise"):
+        with pytest.raises(InjectedFault):
+            run_grid(GRID, engine="batched", strict=True)
+
+
+# ------------------------------------------------------- poisoned cells
+
+def test_poisoned_cell_quarantined_siblings_survive():
+    """A cell that fails on every backend (batched dispatch AND scalar
+    fallback) becomes a structured FailedCell; its chunk-mates are
+    rescued by the per-cell fallback rung and stay bit-identical."""
+    plan = ("chunk.dispatch[syrk/ciao-c]@*=raise,"
+            "cell.run[syrk/ciao-c]@*=raise")
+    with faults.injected(plan):
+        recs = run_grid(GRID, engine="batched", retries=1)
+    failed = [r for r in recs if isinstance(r, FailedCell)]
+    assert len(failed) == 1
+    f = failed[0]
+    assert (f.workload, f.policy) == ("syrk", "ciao-c")
+    assert f.error_type == "InjectedFault"
+    assert f.attempts >= 2                  # ladder attempts + scalar
+    assert f.backends[-1] == "scalar"       # full trail recorded
+    assert not f.truncated
+    ok = {(r.workload, r.policy): r for r in recs
+          if isinstance(r, RunRecord)}
+    base = {(r.workload, r.policy): r for r in _base()}
+    for key, rec in ok.items():
+        assert rec == base[key]
+    assert last_batched_perf()["failed_cells"] == 1
+
+
+def test_failed_cell_json_round_trip(tmp_path):
+    plan = ("chunk.dispatch[syrk/ciao-c]@*=raise,"
+            "cell.run[syrk/ciao-c]@*=raise")
+    with faults.injected(plan):
+        recs = run_grid(GRID, engine="batched")
+    path = str(tmp_path / "mixed.json")
+    save_records(recs, path, GRID)
+    assert load_records(path) == recs
+
+
+def test_limit_sweep_survives_poisoned_subcell():
+    """best-swl flattens into per-limit subcells; poisoning the sweep
+    cell's dispatches must still reduce the scalar fallback into one
+    whole-cell record identical to the batched reduce."""
+    base = run_grid(SWEEP, engine="batched")
+    with faults.injected("chunk.dispatch[syrk/best-swl]@*=raise"):
+        recs = run_grid(SWEEP, engine="batched")
+    assert recs == base
+    assert last_batched_perf()["fallback_cells"] >= 1
+
+
+# ------------------------------------------------------------- deadlines
+
+def test_deadline_never_fires_is_bit_identical():
+    """Arming a (generous) deadline switches single-SM batches to
+    bounded-cycle slicing; the records must not change."""
+    recs = run_grid(GRID, engine="batched", deadline_s=600.0)
+    assert recs == _base()
+    assert last_batched_perf()["truncated_cells"] == 0
+
+
+def test_deadline_mid_run_truncates_resumably(monkeypatch):
+    # At test scale the whole batch finishes inside one deadline slice
+    # (one run-to-completion stepper call), so shrink the slice quantum
+    # to force many bounded rounds — each stalled by the injected delay
+    # — and let the between-quanta deadline check fire mid-run.
+    from repro.core import batched
+    monkeypatch.setattr(batched, "_DEADLINE_SLICE", 500)
+    with faults.injected("stepper.step@*=delay:0.02"):
+        recs = run_grid(GRID, engine="batched", deadline_s=0.05)
+    trunc = [r for r in recs if isinstance(r, FailedCell) and r.truncated]
+    assert trunc, "expected mid-run truncation"
+    assert last_batched_perf()["truncated_cells"] >= len(trunc)
+    # nothing sticky: a clean rerun recovers every cell
+    assert run_grid(GRID, engine="batched") == _base()
+
+
+def test_fine_grained_slicing_is_bit_exact(monkeypatch):
+    """Deadline slicing reuses the multi-SM quantum mechanism; even at
+    an absurdly small quantum the records must not change."""
+    from repro.core import batched
+    monkeypatch.setattr(batched, "_DEADLINE_SLICE", 500)
+    recs = run_grid(GRID, engine="batched", deadline_s=600.0)
+    assert recs == _base()
+
+
+def test_deadline_zero_truncates_everything():
+    recs = run_grid(GRID, engine="batched", deadline_s=0.0)
+    assert all(isinstance(r, FailedCell) and r.truncated for r in recs)
+
+
+def test_deadline_truncates_process_engine_cells():
+    grid = dataclasses.replace(GRID, name="res-proc")
+    recs = run_grid(grid, engine="process", deadline_s=0.0)
+    assert all(isinstance(r, FailedCell) and r.truncated for r in recs)
+
+
+# ----------------------------------------------- workload cache recovery
+
+def test_corrupt_cache_file_regenerated_once(tmp_path, monkeypatch):
+    """A corrupted on-disk workload cache entry is detected by the
+    checksum (or npz parser), deleted, regenerated — and the sweep's
+    records are unaffected."""
+    monkeypatch.setenv("REPRO_WORKLOAD_CACHE_DIR", str(tmp_path / "wl"))
+    small = dataclasses.replace(GRID, name="res-cache",
+                                workloads=("syrk",), policies=("gto",))
+    base = run_grid(small, engine="batched")     # seeds the cache
+    with faults.injected("cache.load@1=corrupt"):
+        recs = run_grid(small, engine="batched")
+    assert recs == base
+    # the regenerated file must now be clean and loadable
+    recs2 = run_grid(small, engine="batched")
+    assert recs2 == base

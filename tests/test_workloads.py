@@ -154,6 +154,46 @@ def test_line_size_guard(tmp_path):
         load_workload(bad)
 
 
+def test_content_checksum_round_trip(tmp_path):
+    """v2 files carry a CRC-32 over the trace content; a clean
+    save→load round trip must verify and reproduce the traces."""
+    from repro.workloads.io import _traces_crc, save_workload
+    wl = make_workload("syrk", seed=3, scale=0.1)
+    path = save_workload(wl, tmp_path / "syrk")
+    back = load_workload(path)
+    for (k0, a0), (k1, a1) in zip(wl.traces, back.traces):
+        assert np.array_equal(k0, k1) and np.array_equal(a0, a1)
+    # the checksum hashes values, not storage: lists and arrays agree
+    as_arrays = [(np.asarray(k, np.uint8), np.asarray(a, np.int64))
+                 for k, a in wl.traces]
+    assert _traces_crc(wl.traces) == _traces_crc(as_arrays)
+
+
+def test_content_checksum_detects_tampering(tmp_path):
+    """Flipping one address in a saved file must fail the checksum —
+    this is the guard the runner's cache-regeneration path relies on."""
+    import json
+    from repro.workloads.io import save_workload
+    wl = make_workload("syrk", seed=3, scale=0.1)
+    path = save_workload(wl, tmp_path / "syrk")
+    with np.load(path, allow_pickle=False) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    arrays["addrs_0"] = arrays["addrs_0"].copy()
+    arrays["addrs_0"][0] ^= 128
+    with open(path, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+    with pytest.raises(ValueError, match="content checksum"):
+        load_workload(path)
+    # ...but a v1 file (no crc in the header) still loads untampered
+    header = json.loads(str(arrays["header"]))
+    del header["crc"]
+    header["format"] = 1
+    arrays["header"] = np.array(json.dumps(header))
+    with open(path, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+    assert load_workload(path).name == "syrk"
+
+
 # --------------------------------------------------------- derived traces
 def test_gather_stream_matches_kernel_ref():
     """The gather workload's index stream is a valid input to the
