@@ -466,6 +466,20 @@ def _failed_cell(cell: _Cell, exc: BaseException, attempts: int,
         attempts=attempts, backends=list(trail), truncated=truncated)
 
 
+@dataclasses.dataclass
+class _Coop:
+    """Cooperative multi-worker execution state (``run_grid(...,
+    coordinate=True)``): this worker's identity, the chunk-lease TTL,
+    the heartbeat keeper thread, the poll cadence for chunks leased to
+    other workers, and the shared lease counters merged into
+    :func:`last_batched_perf` at the end of the run."""
+    worker: str
+    ttl: float
+    keeper: Any
+    poll_s: float
+    stats: Dict[str, float]
+
+
 def _cell_fault_key(cell: _Cell) -> str:
     return f"{cell.workload}/{cell.policy}/{cell.variant}"
 
@@ -478,6 +492,8 @@ def _run_cells_batched(cells: Sequence[_Cell],
                        deadline: Optional[float] = None,
                        run_ledger=None,
                        gidx: Optional[Sequence[int]] = None,
+                       chunk_budget: Optional[float] = None,
+                       coop: Optional[_Coop] = None,
                        ) -> Tuple[List[AnyRecord], Dict[str, float]]:
     """Run batchable cells through the lockstep engine: flatten Best-SWL
     / statPCAL limit sweeps into per-limit subcells, group by (SimConfig,
@@ -511,6 +527,19 @@ def _run_cells_batched(cells: Sequence[_Cell],
     come back as ``FailedCell(truncated=True)``. ``run_ledger`` saves a
     shard per fully-successful chunk (keyed by the global cell ids in
     ``gidx``) and skips chunks whose shard already exists.
+
+    ``chunk_budget`` bounds each *chunk's* wall clock (seconds, not an
+    absolute time like ``deadline``): a chunk that blows its budget is
+    not truncated but **re-sharded** — split at cell boundaries into
+    child chunks (recorded in the ledger's ``resplits/`` so resumed or
+    cooperating workers adopt the same plan) that re-enter the queue,
+    so chronically slow chunks converge to single cells instead of
+    starving the run. Uses the same bounded-cycle quantum slicing as
+    ``deadline``. ``coop`` (built by ``run_grid(coordinate=True)``)
+    makes chunk execution lease-based: each chunk is claimed in the
+    ledger before running, heartbeated while running, and released
+    after its shard lands; chunks leased to other live workers are
+    polled until their shard appears or their lease expires (takeover).
     """
     import time as _time
 
@@ -527,7 +556,8 @@ def _run_cells_batched(cells: Sequence[_Cell],
         drain_s=0.0, rounds=0.0, batches=0.0, chunks=0.0, groups=0.0,
         workers=float(workers), peak_token_plane_bytes=0.0,
         retries=0.0, fallback_cells=0.0, failed_cells=0.0,
-        truncated_cells=0.0, chunks_resumed=0.0, shard_errors=0.0)
+        truncated_cells=0.0, chunks_resumed=0.0, shard_errors=0.0,
+        resplit_chunks=0.0)
     t0 = _time.perf_counter()
     grouping = batch_grouping()
     # (cell index, limit ordinal, BatchCell); grouped by shape class
@@ -572,17 +602,59 @@ def _run_cells_batched(cells: Sequence[_Cell],
     perf["group_build_s"] += _time.perf_counter() - t0
 
     meter = _PlaneMeter()
-    # content-addressed ledger keys (global cell ids, so a resume with a
-    # different worker count / chunk plan still matches what it can) and
-    # human-readable fault keys for $REPRO_FAULT_PLAN targeting
-    chunk_keys = [
-        _ledger.chunk_key([f"{gidx[i]}:{j}" for i, j, _ in chunk])
-        if run_ledger is not None else None
-        for _, _, chunk in chunks]
-    fault_keys = [
-        ",".join(sorted({_cell_fault_key(cells[i]) for i, _, _ in chunk}))
-        for _, _, chunk in chunks]
+
+    def _item_id(t) -> str:
+        return f"{gidx[t[0]]}:{t[1]}"
+
+    def _key_of(chunk):
+        # content-addressed ledger key (global cell ids, so a resume
+        # with a different worker count / chunk plan still matches what
+        # it can)
+        return (_ledger.chunk_key([_item_id(t) for t in chunk])
+                if run_ledger is not None else None)
+
+    def _fkey_of(chunk):
+        # human-readable fault key for $REPRO_FAULT_PLAN targeting
+        return ",".join(sorted({_cell_fault_key(cells[i])
+                                for i, _, _ in chunk}))
+
+    chunk_keys = [_key_of(chunk) for _, _, chunk in chunks]
+    fault_keys = [_fkey_of(chunk) for _, _, chunk in chunks]
     local_of = {g: i for i, g in enumerate(gidx)}
+
+    # adopt recorded budget resplits: chunks a previous (or concurrent)
+    # worker split are replaced by the same children, so every worker's
+    # plan converges on identical content-addressed keys. Child item
+    # order is canonical (sorted ids) so duplicate executions write
+    # byte-identical shards.
+    if run_ledger is not None:
+        saved = run_ledger.load_resplits()
+        examine = collections.deque(range(len(chunks))) if saved else ()
+        while examine:
+            n = examine.popleft()
+            kid_ids = saved.get(chunk_keys[n])
+            if not kid_ids or len(kid_ids) < 2:
+                continue          # a real split always has ≥2 children
+            cfg, gpu, chunk = chunks[n]
+            by_id = {_item_id(t): t for t in chunk}
+            ids_flat = [cid for kid in kid_ids for cid in kid]
+            if (len(ids_flat) != len(set(ids_flat))
+                    or set(ids_flat) != set(by_id)):
+                continue          # malformed/foreign record: run whole
+            kids = [[by_id[cid] for cid in sorted(kid)]
+                    for kid in kid_ids]
+            chunks[n] = (cfg, gpu, kids[0])
+            chunk_keys[n] = _key_of(kids[0])
+            fault_keys[n] = _fkey_of(kids[0])
+            examine.append(n)
+            for kid in kids[1:]:
+                chunks.append((cfg, gpu, kid))
+                chunk_keys.append(_key_of(kid))
+                fault_keys.append(_fkey_of(kid))
+                examine.append(len(chunks) - 1)
+        perf["chunks"] = float(len(chunks))
+        order = sorted(range(len(chunks)),
+                       key=lambda n: (-len(chunks[n][2]), n))
 
     def _resume_chunk(n: int):
         """("resumed", triples, recs) from the ledger shard, or None."""
@@ -614,23 +686,37 @@ def _run_cells_batched(cells: Sequence[_Cell],
         except Exception:
             perf["shard_errors"] += 1
 
-    def _run_chunk(n: int):
-        cfg, gpu, chunk = chunks[n]
-        resumed = _resume_chunk(n)
-        if resumed is not None:
-            return resumed
+    def _split_chunk(chunk):
+        """Deterministic halving for budget resplits: at cell
+        boundaries when the chunk spans several cells, at subcell
+        boundaries for a single sweep cell; ``None`` for a single item
+        (nothing smaller to converge to). Children use canonical
+        (sorted-id) item order, matching the plan-time reapplication
+        above, so duplicate executions write byte-identical shards."""
         cell_is = sorted({i for i, _, _ in chunk})
-        if deadline is not None and _time.monotonic() >= deadline:
-            return ("truncated", cell_is, 0, [])
+        if len(cell_is) >= 2:
+            head = set(cell_is[:len(cell_is) // 2])
+            kids = ([t for t in chunk if t[0] in head],
+                    [t for t in chunk if t[0] not in head])
+        elif len(chunk) >= 2:
+            kids = (chunk[:len(chunk) // 2], chunk[len(chunk) // 2:])
+        else:
+            return None
+        return [sorted(kid, key=_item_id) for kid in kids]
+
+    def _exec_chunk(n: int, cfg, gpu, chunk, cell_is):
         be = ("auto" if (backend == "jax" and gpu is not None)
               else backend)
         ladder = _backend_ladder(be)
         attempts = 0
         trail: List[str] = []
+        budget = chunk_budget
         for rung_no, rung in enumerate(ladder):
             # transient failures are retried on the first rung before
             # degrading; later rungs get one attempt each
-            for _ in range(retries + 1 if rung_no == 0 else 1):
+            slots = retries + 1 if rung_no == 0 else 1
+            while slots > 0:
+                slots -= 1
                 attempts += 1
                 trail.append(rung)
                 try:
@@ -640,9 +726,12 @@ def _run_cells_batched(cells: Sequence[_Cell],
                     nbytes = int(eng.toks.nbytes)
                     meter.add(nbytes)
                     try:
+                        dl = deadline
+                        if budget is not None:
+                            cut = _time.monotonic() + budget
+                            dl = cut if dl is None else min(dl, cut)
                         triples = [(i, j, res) for (i, j, _), res
-                                   in zip(chunk,
-                                          eng.run(deadline=deadline))]
+                                   in zip(chunk, eng.run(deadline=dl))]
                         eperf = dict(eng.perf)
                     finally:
                         meter.sub(nbytes)
@@ -652,7 +741,31 @@ def _run_cells_batched(cells: Sequence[_Cell],
                         for i, j, res in triples])
                     return ("ok", triples, eperf, attempts, trail)
                 except DeadlineExceeded:
-                    return ("truncated", cell_is, attempts, trail)
+                    if deadline is not None \
+                            and _time.monotonic() >= deadline:
+                        return ("truncated", cell_is, attempts, trail)
+                    # the chunk blew its own wall-clock budget: split it
+                    # so stragglers converge instead of starving the run
+                    kids = _split_chunk(chunk)
+                    if kids is None:
+                        # single item — run it unbudgeted; the probe
+                        # attempt is not charged as a retry
+                        budget = None
+                        slots += 1
+                        attempts -= 1
+                        trail.pop()
+                        continue
+                    faults.fire("chunk.resplit", key=fault_keys[n])
+                    if run_ledger is not None:
+                        try:
+                            run_ledger.save_resplit(
+                                chunk_keys[n],
+                                [[_item_id(t) for t in kid]
+                                 for kid in kids])
+                        except Exception:
+                            perf["shard_errors"] += 1
+                    perf["resplit_chunks"] += 1
+                    return ("resplit", n, kids)
                 except Exception:
                     if strict:
                         raise
@@ -674,11 +787,112 @@ def _run_cells_batched(cells: Sequence[_Cell],
                                               trail)))
         return ("fallback", recs, fails, attempts, trail)
 
+    def _run_chunk(n: int):
+        cfg, gpu, chunk = chunks[n]
+        resumed = _resume_chunk(n)
+        if resumed is not None:
+            return resumed
+        cell_is = sorted({i for i, _, _ in chunk})
+        if deadline is not None and _time.monotonic() >= deadline:
+            return ("truncated", cell_is, 0, [])
+        lease = None
+        if coop is not None:
+            lease = run_ledger.claim_lease(chunk_keys[n], coop.worker,
+                                           coop.ttl)
+            if lease is None:
+                coop.stats["lease_conflicts"] += 1
+                return ("leased", n)
+            coop.stats["lease_claims"] += 1
+            if lease.get("takeover_of"):
+                coop.stats["lease_takeovers"] += 1
+            # deterministic crash site: a `raise` here dies holding the
+            # lease — exactly what a SIGKILLed worker leaves behind
+            faults.fire("worker.exit", key=fault_keys[n])
+            coop.keeper.add(chunk_keys[n], lease)
+        try:
+            out = _exec_chunk(n, cfg, gpu, chunk, cell_is)
+        finally:
+            if lease is not None:
+                coop.keeper.remove(chunk_keys[n])
+        if lease is not None:
+            # released on *any* tagged outcome (the shard — when one was
+            # earned — is already on disk); an exception above skips
+            # this, leaving the lease to expire like a real crash
+            run_ledger.release_lease(chunk_keys[n], lease)
+        return out
+
+    chunks_mu = threading.Lock()
+
+    def _register_children(parent_n: int, kids) -> List[int]:
+        cfg, gpu, _ = chunks[parent_n]
+        new = []
+        with chunks_mu:
+            for kid in kids:
+                chunks.append((cfg, gpu, kid))
+                chunk_keys.append(_key_of(kid))
+                fault_keys.append(_fkey_of(kid))
+                new.append(len(chunks) - 1)
+            perf["chunks"] = float(len(chunks))
+        return new
+
+    outs: List[Tuple] = []
+    waiting: List[int] = []   # chunks leased to other live workers
+
+    def _collect(out) -> List[int]:
+        """Main-thread result triage; returns chunk indices to
+        (re)queue — a resplit chunk's children."""
+        if out[0] == "resplit":
+            return _register_children(out[1], out[2])
+        if out[0] == "leased":
+            waiting.append(out[1])
+            return []
+        outs.append(out)
+        return []
+
     if workers > 1 and len(chunks) > 1:
+        from concurrent.futures import FIRST_COMPLETED
+        from concurrent.futures import wait as _fwait
         with ThreadPoolExecutor(max_workers=workers) as pool:
-            outs = list(pool.map(_run_chunk, order))
+            futs = {pool.submit(_run_chunk, n) for n in order}
+            while futs:
+                done, futs = _fwait(futs,
+                                    return_when=FIRST_COMPLETED)
+                requeue: List[int] = []
+                for f in done:
+                    requeue.extend(_collect(f.result()))
+                futs |= {pool.submit(_run_chunk, n) for n in requeue}
     else:
-        outs = [_run_chunk(n) for n in order]
+        queue = collections.deque(order)
+        while queue:
+            queue.extend(_collect(_run_chunk(queue.popleft())))
+
+    # cooperative wait loop: poll chunks leased to other workers until
+    # their shard lands (resumed), their lease expires (takeover — the
+    # claim inside _run_chunk succeeds), or the deadline passes
+    while waiting:
+        if deadline is not None and _time.monotonic() >= deadline:
+            for n in waiting:
+                outs.append(("truncated",
+                             sorted({i for i, _, _ in chunks[n][2]}),
+                             0, []))
+            waiting = []
+            break
+        progressed = False
+        queue = collections.deque(waiting)
+        waiting = []
+        while queue:
+            out = _run_chunk(queue.popleft())
+            if out[0] == "leased":
+                waiting.append(out[1])
+            elif out[0] == "resplit":
+                queue.extend(_register_children(out[1], out[2]))
+                progressed = True
+            else:
+                outs.append(out)
+                progressed = True
+        if waiting and not progressed:
+            coop.stats["lease_wait_s"] += coop.poll_s
+            _time.sleep(coop.poll_s)
 
     results: Dict[int, List] = {}
     rec_map: Dict[int, RunRecord] = {}
@@ -832,7 +1046,12 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
              retries: int = 1,
              deadline_s: Optional[float] = None,
              run_id: Optional[str] = None,
-             resume: Optional[str] = None) -> List[AnyRecord]:
+             resume: Optional[str] = None,
+             chunk_budget_s: Optional[float] = None,
+             coordinate: bool = False,
+             lease_ttl_s: Optional[float] = None,
+             worker: Optional[str] = None,
+             heartbeat_fatal: bool = False) -> List[AnyRecord]:
     """Run every cell; see the module docstring for the three engines.
     ``jobs`` (preferred name; ``processes`` is the legacy alias) sets
     the parallelism: the batched engine fans chunks over that many
@@ -859,6 +1078,23 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
       records bit-identical to an uninterrupted run. Setting
       ``$REPRO_RUN_LEDGER=1`` auto-ledgers every run under a generated
       id (a crash flight recorder).
+    * ``chunk_budget_s`` bounds each chunk's wall clock: a chunk that
+      exceeds it is **re-sharded** at cell boundaries into child chunks
+      that re-enter the queue (and are recorded in the ledger so
+      resumes/co-workers adopt the same plan) — stragglers converge to
+      single cells instead of starving the run or being truncated.
+    * ``coordinate=True`` (requires ``run_id``/``resume``) makes this
+      process one of N cooperating workers draining the same run:
+      chunks are claimed via ledger leases (TTL ``lease_ttl_s``,
+      default ``$REPRO_LEASE_TTL`` or 30s), heartbeated while running,
+      and reclaimed from crashed workers once their lease expires.
+      Records stay bit-identical to a serial run regardless of worker
+      count, crashes, or duplicate completions (see the ledger module
+      docstring). ``worker`` names this worker (default
+      ``<hostname>-<pid>``); ``heartbeat_fatal=True`` (the
+      ``python -m repro.runs work`` entrypoint sets it) turns a failed
+      or stolen heartbeat into immediate worker death (exit 70) so a
+      wedged worker cannot double-spend a reclaimed chunk's time.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
@@ -877,28 +1113,62 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
     ghash = _ledger.grid_hash(grid)
     if run_id is None and os.environ.get("REPRO_RUN_LEDGER", ""):
         run_id = _auto_run_id(grid, ghash)
+    if coordinate and run_id is None:
+        raise ValueError("coordinate=True requires run_id= or resume= "
+                         "— cooperating workers meet at a ledger")
     led = None
     if run_id is not None:
         led = _ledger.RunLedger(run_id)
+        # cooperating workers must never wipe each other's shards: a
+        # coordinate open of an existing run always resumes it
         led.open({"grid_hash": ghash, "grid": _grid_meta(grid),
+                  "grid_doc": grid_to_doc(grid),
                   "engine": engine, "jobs": jobs, "strict": strict,
                   "cells": len(expand_grid(grid))},
-                 resume=resume is not None)
+                 resume=(resume is not None
+                         or (coordinate and led.manifest_path.exists())))
+    coop = None
+    if coordinate:
+        ttl = (float(lease_ttl_s) if lease_ttl_s is not None
+               else _ledger.lease_ttl())
+        wid = worker or _ledger.worker_id()
+        on_fatal = None
+        if heartbeat_fatal:
+            def on_fatal(reason: str) -> None:
+                import sys
+                print(f"# worker {wid}: fatal: {reason}",
+                      file=sys.stderr, flush=True)
+                os._exit(70)
+        keeper = _ledger.LeaseKeeper(led, ttl, on_fatal=on_fatal)
+        keeper.start()
+        coop = _Coop(worker=wid, ttl=ttl, keeper=keeper,
+                     poll_s=min(max(ttl / 4.0, 0.05), 1.0),
+                     stats=dict(lease_claims=0.0, lease_conflicts=0.0,
+                                lease_takeovers=0.0, lease_wait_s=0.0))
     deadline = (time.monotonic() + deadline_s
                 if deadline_s is not None else None)
     cells = expand_grid(grid)
     records: List[Optional[AnyRecord]] = [None] * len(cells)
+    batched_ran = False
     if engine != "process":
         batch_idx = [i for i, c in enumerate(cells) if _batchable(c)]
         if engine in ("batched", "jax") \
                 or len(batch_idx) >= AUTO_MIN_BATCH:
-            recs, perf = _run_cells_batched(
-                [cells[i] for i in batch_idx],
-                backend="jax" if engine == "jax" else None,
-                workers=batch_workers(jobs),
-                strict=strict, retries=retries, deadline=deadline,
-                run_ledger=led, gidx=batch_idx)
+            try:
+                recs, perf = _run_cells_batched(
+                    [cells[i] for i in batch_idx],
+                    backend="jax" if engine == "jax" else None,
+                    workers=batch_workers(jobs),
+                    strict=strict, retries=retries, deadline=deadline,
+                    run_ledger=led, gidx=batch_idx,
+                    chunk_budget=chunk_budget_s, coop=coop)
+            except BaseException:
+                # a strict-mode fault must not leak the heartbeat thread
+                if coop is not None:
+                    coop.keeper.stop()
+                raise
             _TLS.batched_perf = perf
+            batched_ran = True
             for i, rec in zip(batch_idx, recs):
                 records[i] = rec
     rest = [i for i in range(len(cells)) if records[i] is None]
@@ -913,6 +1183,13 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
             else:
                 still.append(i)
         rest = still
+    if rest and coop is not None:
+        try:
+            rest = _run_rest_coop(cells, rest, records, led, coop,
+                                  deadline, strict)
+        except BaseException:
+            coop.keeper.stop()
+            raise
     if rest and deadline is not None and time.monotonic() >= deadline:
         for i in rest:
             records[i] = _failed_cell(
@@ -929,27 +1206,18 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
         else:
             rest_out = [runner(cells[i]) for i in rest]
         for i, out in zip(rest, rest_out):
-            if strict:
-                records[i] = out
-            elif out[0] == "ok":
-                records[i] = out[1]
-            else:
-                records[i] = FailedCell(
-                    grid=cells[i].grid, workload=cells[i].workload,
-                    policy=cells[i].policy, variant=cells[i].variant,
-                    num_sms=(cells[i].gpu.num_sms if cells[i].gpu
-                             else 1),
-                    seed=cells[i].seed, scale=cells[i].scale,
-                    error=out[2], error_type=out[1], attempts=1,
-                    backends=["scalar"])
+            records[i] = _rest_out_to_record(cells[i], out, strict)
             if led is not None and isinstance(records[i], RunRecord):
-                try:
-                    led.save_chunk(
-                        _ledger.chunk_key([f"cell:{i}"]),
-                        [{"kind": "record", "i": i,
-                          "rec": dataclasses.asdict(records[i])}])
-                except Exception:
-                    pass           # best-effort, like the chunk shards
+                _save_rest_shard(led, i, records[i])
+    if coop is not None:
+        coop.keeper.stop()
+        coop.keeper.join(timeout=5.0)
+        merged = (dict(getattr(_TLS, "batched_perf", None) or {})
+                  if batched_ran else {})
+        merged.update(coop.stats)
+        merged.update({k: float(v)
+                       for k, v in coop.keeper.stats().items()})
+        _TLS.batched_perf = merged
     if led is not None:
         failed = [r for r in records if isinstance(r, FailedCell)]
         status = ("truncated" if any(f.truncated for f in failed)
@@ -958,6 +1226,79 @@ def run_grid(grid: ExperimentGrid, processes: Optional[int] = None,
     if json_path:
         save_records(records, json_path, grid=grid)
     return records
+
+
+def _rest_out_to_record(cell: _Cell, out, strict: bool) -> AnyRecord:
+    """Normalize a scalar-path execution outcome (a record in strict
+    mode, a ``_run_cell_safe`` tagged tuple otherwise) to a record."""
+    if strict:
+        return out
+    if out[0] == "ok":
+        return out[1]
+    return FailedCell(
+        grid=cell.grid, workload=cell.workload, policy=cell.policy,
+        variant=cell.variant,
+        num_sms=(cell.gpu.num_sms if cell.gpu else 1),
+        seed=cell.seed, scale=cell.scale,
+        error=out[2], error_type=out[1], attempts=1,
+        backends=["scalar"])
+
+
+def _save_rest_shard(led, i: int, rec: RunRecord) -> None:
+    """Best-effort per-cell shard for the scalar/process path."""
+    try:
+        led.save_chunk(_ledger.chunk_key([f"cell:{i}"]),
+                       [{"kind": "record", "i": i,
+                         "rec": dataclasses.asdict(rec)}])
+    except Exception:
+        pass               # best-effort, like the chunk shards
+
+
+def _run_rest_coop(cells, rest, records, led, coop, deadline,
+                   strict: bool) -> List[int]:
+    """Cooperative (lease-based) execution of the scalar-path cells:
+    claim ``cell:<i>`` leases, run, shard, release; cells leased to
+    other live workers are polled until their shard lands or their
+    lease expires. Returns the cell indices left unfinished (deadline
+    passed) — the caller truncates them."""
+    runner = _run_cell if strict else _run_cell_safe
+    waiting = list(rest)
+    while waiting:
+        if deadline is not None and time.monotonic() >= deadline:
+            return waiting
+        progressed = False
+        still = []
+        for i in waiting:
+            key = _ledger.chunk_key([f"cell:{i}"])
+            rec = _rest_shard_to_record(led.load_chunk(key))
+            if rec is not None:
+                records[i] = rec
+                progressed = True
+                continue
+            lease = led.claim_lease(key, coop.worker, coop.ttl)
+            if lease is None:
+                coop.stats["lease_conflicts"] += 1
+                still.append(i)
+                continue
+            coop.stats["lease_claims"] += 1
+            if lease.get("takeover_of"):
+                coop.stats["lease_takeovers"] += 1
+            faults.fire("worker.exit", key=_cell_fault_key(cells[i]))
+            coop.keeper.add(key, lease)
+            try:
+                out = runner(cells[i])
+            finally:
+                coop.keeper.remove(key)
+            records[i] = _rest_out_to_record(cells[i], out, strict)
+            if isinstance(records[i], RunRecord):
+                _save_rest_shard(led, i, records[i])
+            led.release_lease(key, lease)
+            progressed = True
+        waiting = still
+        if waiting and not progressed:
+            coop.stats["lease_wait_s"] += coop.poll_s
+            time.sleep(coop.poll_s)
+    return []
 
 
 def _rest_shard_to_record(items) -> Optional[RunRecord]:
@@ -977,6 +1318,55 @@ def default_processes() -> int:
 
 
 # ------------------------------------------------------------ persistence
+def grid_to_doc(grid: ExperimentGrid) -> dict:
+    """Full, *reconstructible* grid serialization, stored in run
+    manifests so a ``python -m repro.runs work`` worker can rebuild the
+    grid from the ledger alone (contrast :func:`_grid_meta`, a
+    human-oriented summary). Round-trips through
+    :func:`grid_from_doc` preserving ``grid_hash``."""
+    def cfg_doc(cfg: Optional[SimConfig]):
+        return dataclasses.asdict(cfg) if cfg is not None else None
+    return {
+        "name": grid.name,
+        "workloads": list(grid.workloads),
+        "policies": list(grid.policies),
+        "variants": ({k: cfg_doc(v)
+                      for k, v in dict(grid.variants).items()}
+                     if grid.variants else None),
+        "scale": grid.scale,
+        "seed": grid.seed,
+        "gpu": dataclasses.asdict(grid.gpu) if grid.gpu else None,
+        "best_swl_limits": list(grid.best_swl_limits),
+    }
+
+
+def grid_from_doc(doc: Mapping) -> ExperimentGrid:
+    from repro.core.simulator import DetectorConfig, OnChipConfig
+
+    def cfg_from(d):
+        if d is None:
+            return None
+        d = dict(d)
+        if isinstance(d.get("detector"), dict):
+            d["detector"] = DetectorConfig(**d["detector"])
+        if isinstance(d.get("onchip"), dict):
+            d["onchip"] = OnChipConfig(**d["onchip"])
+        return SimConfig(**d)
+
+    variants = doc.get("variants")
+    return ExperimentGrid(
+        name=doc["name"],
+        workloads=list(doc["workloads"]),
+        policies=list(doc["policies"]),
+        variants=({k: cfg_from(v) for k, v in variants.items()}
+                  if variants else None),
+        scale=doc.get("scale", 0.5),
+        seed=doc.get("seed", 0),
+        gpu=GPUConfig(**doc["gpu"]) if doc.get("gpu") else None,
+        best_swl_limits=list(doc.get("best_swl_limits",
+                                     (2, 4, 6, 8, 16, 32, 48))))
+
+
 def _grid_meta(grid: ExperimentGrid) -> dict:
     return {
         "name": grid.name,

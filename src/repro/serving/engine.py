@@ -29,6 +29,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core import faults
+from repro.core.faults import InjectedFault
 from repro.core.interference import DetectorConfig, InterferenceDetector
 from repro.core.policies import CIAOPolicy
 from repro.serving.pages import PagePool, PoolConfig
@@ -70,6 +72,7 @@ class ServeStats:
     work_units: float = 0.0        # decode tokens + (re)prefill/recompute cost
     completed: int = 0
     occupancy_sum: float = 0.0
+    injected_faults: int = 0       # absorbed serve.* fault injections
 
     @property
     def tokens_per_unit(self) -> float:
@@ -136,6 +139,11 @@ class ServeEngine:
             - self.pool.pinned_count(pool="main")
         for i in range(self.cfg.slots):
             if self.slots[i] is None and self.waiting:
+                # fired before any pool mutation: an injected admission
+                # fault (absorbed in step()) skips this step's admissions
+                # but can never leak pins or lose the request
+                faults.fire("serve.admit",
+                            key=f"rid:{self.waiting[0].rid}")
                 need = self._pages_needed(self.waiting[0],
                                           self.cfg.pool.page_tokens) \
                     + self.waiting[0].prefix_pages
@@ -190,7 +198,10 @@ class ServeEngine:
     # ---------------------------------------------------------------- step
     def step(self) -> int:
         """One decode step over the running batch. Returns tokens decoded."""
-        self._admit()
+        try:
+            self._admit()
+        except InjectedFault:
+            self.stats.injected_faults += 1   # admission down this step
         decoded = 0
         for i, seq in enumerate(self.slots):
             if seq is None or seq.done or not self._allowed(i):
@@ -201,8 +212,16 @@ class ServeEngine:
                 if self.cfg.policy == "statpcal" and i in self._bypass:
                     self.stats.work_units += 2.0   # uncached stream cost
                 else:
-                    r = self.pool.acquire(key, i, i,
-                                          isolated=self._isolated(i))
+                    try:
+                        faults.fire("serve.page_alloc",
+                                    key=f"rid:{seq.req.rid}")
+                        r = self.pool.acquire(key, i, i,
+                                              isolated=self._isolated(i))
+                    except InjectedFault:
+                        # transient allocation failure: feed the normal
+                        # defer/preempt path, accounting stays exact
+                        self.stats.injected_faults += 1
+                        r = "defer"
                     if r == "defer":
                         self.stats.deferred += 1
                         seq.defers += 1
@@ -265,6 +284,11 @@ class ServeEngine:
 
     def _preempt_youngest(self, exclude: int) -> None:
         """Free the youngest running sequence's pages (recompute later)."""
+        try:
+            faults.fire("serve.preempt", key=f"exclude:{exclude}")
+        except InjectedFault:
+            self.stats.injected_faults += 1   # skip this preemption round
+            return
         victim = None
         for i, s in enumerate(self.slots):
             if s is None or s.done or i == exclude:

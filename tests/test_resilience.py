@@ -159,6 +159,79 @@ def test_deadline_truncates_process_engine_cells():
     assert all(isinstance(r, FailedCell) and r.truncated for r in recs)
 
 
+# ------------------------------------------------- adaptive re-sharding
+
+def _tiny_slices(monkeypatch):
+    # see test_deadline_mid_run_truncates_resumably: at test scale a
+    # chunk finishes inside one deadline slice, so shrink the quantum
+    # to give the between-quanta budget check a chance to fire
+    from repro.core import batched
+    monkeypatch.setattr(batched, "_DEADLINE_SLICE", 500)
+
+
+def test_blown_chunk_budget_resharded_not_truncated(monkeypatch):
+    """A chunk that exceeds ``chunk_budget_s`` is split at cell
+    boundaries and its children complete — records identical to an
+    unbudgeted run, nothing truncated or quarantined."""
+    from repro.core.ledger import RunLedger
+    base = _base()
+    _tiny_slices(monkeypatch)
+    with faults.injected("stepper.step@*=delay:0.02"):
+        recs = run_grid(GRID, engine="batched", run_id="rs1",
+                        chunk_budget_s=0.01)
+    assert recs == base
+    assert not any(isinstance(r, FailedCell) for r in recs)
+    perf = last_batched_perf()
+    assert perf["resplit_chunks"] >= 1
+    assert perf["truncated_cells"] == 0
+    # the split was recorded: a resume adopts the children's plan and
+    # re-executes nothing
+    assert RunLedger("rs1").load_resplits()
+    recs2 = run_grid(GRID, engine="batched", resume="rs1")
+    assert recs2 == base
+    assert last_batched_perf()["stepper_s"] == 0.0
+
+
+def test_chunk_budget_without_ledger_still_completes(monkeypatch):
+    base = _base()
+    _tiny_slices(monkeypatch)
+    with faults.injected("stepper.step@*=delay:0.02"):
+        recs = run_grid(GRID, engine="batched", chunk_budget_s=0.01)
+    assert recs == base
+    assert last_batched_perf()["resplit_chunks"] >= 1
+
+
+def test_crash_at_resplit_publication_is_resumable(monkeypatch):
+    """Dying between the budget blowout and the resplit record landing
+    (the ``chunk.resplit`` site) loses nothing: the next worker re-runs
+    or re-splits the parent chunk and records stay identical."""
+    _tiny_slices(monkeypatch)
+    plan = "stepper.step@*=delay:0.02,chunk.resplit@1=raise"
+    with faults.injected(plan):
+        with pytest.raises(InjectedFault):
+            run_grid(GRID, engine="batched", run_id="rs2",
+                     chunk_budget_s=0.01, strict=True)
+    recs = run_grid(GRID, engine="batched", resume="rs2")
+    assert recs == _base()
+    assert last_batched_perf()["failed_cells"] == 0
+
+
+def test_resplit_crash_publishes_nothing(monkeypatch):
+    """The ``chunk.resplit`` site fires *before* the record lands: a
+    crash there leaves no resplit doc behind, and the next worker
+    simply re-runs (or re-splits) the whole parent chunk."""
+    from repro.core.ledger import RunLedger
+    _tiny_slices(monkeypatch)
+    plan = "stepper.step@*=delay:0.02,chunk.resplit@1=raise"
+    with faults.injected(plan):
+        with pytest.raises(InjectedFault):
+            run_grid(GRID, engine="batched", run_id="rs3",
+                     chunk_budget_s=0.01)
+    assert RunLedger("rs3").load_resplits() == {}
+    recs = run_grid(GRID, engine="batched", resume="rs3")
+    assert recs == _base()
+
+
 # ----------------------------------------------- workload cache recovery
 
 def test_corrupt_cache_file_regenerated_once(tmp_path, monkeypatch):

@@ -72,3 +72,41 @@ def test_prefix_cache_reuse():
             Request(rid=1, group=0, prefix_pages=8, decode_tokens=16)]
     st_ = _run("gto", reqs=reqs, main_pages=256)
     assert st_.prefill_pages == 8        # prefix prefilled exactly once
+
+
+# ------------------------------------------------------------ fault sites
+
+def _light_reqs():
+    # no-pressure workload: zero preemptions, so any goodput delta is
+    # attributable to the injected fault alone
+    return synth_requests(40, groups=4, prefix_pages=4, decode_tokens=64,
+                          heavy_frac=0.0)
+
+
+def test_admission_fault_degrades_goodput_never_corrupts():
+    from repro.core import faults
+    base = _run("ciao-c", reqs=_light_reqs(), main_pages=2048)
+    assert base.injected_faults == 0
+    with faults.injected("serve.admit@1-3=raise"):
+        hurt = _run("ciao-c", reqs=_light_reqs(), main_pages=2048)
+    # the fault stalls admission (this step admits nothing) ...
+    assert hurt.injected_faults == 3
+    assert hurt.steps > base.steps
+    assert hurt.goodput < base.goodput
+    # ... but never corrupts the accounting: every request completes
+    # and decodes exactly the same number of tokens
+    assert hurt.completed == base.completed == 40
+    assert hurt.decoded_tokens == base.decoded_tokens
+    assert hurt.prefill_pages == base.prefill_pages
+    assert hurt.work_units == base.work_units
+
+
+def test_page_alloc_and_preempt_faults_absorbed_under_pressure():
+    from repro.core import faults
+    plan = "serve.page_alloc@%5=raise,serve.preempt@%2=raise"
+    with faults.injected(plan):
+        st_ = _run("ciao-c")
+    assert st_.injected_faults > 0
+    assert st_.completed == 256          # nothing lost, only delayed
+    assert st_.decoded_tokens > 0
+    assert st_.steps > 0
